@@ -1,0 +1,59 @@
+"""Paper §6.3.2 finding 4: robustness to the W_oh/W_total ratio.
+
+The paper's 512-512-X ablation varies the historical-window share across
+{0.382, 0.5, 0.618} and finds final PPL stable within a very small range.
+Reduced-scale rerun: same three ratios on a W_total=16 observation window
+over the synthetic corpus; emits final eval CE per ratio and the spread.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TConstConfig, get_config, reduced
+from repro.data.pipeline import DataConfig, batches
+from repro.models.api import build_model
+from repro.training.optim import AdamWConfig, init_opt_state
+from repro.training.schedules import warmup_cosine
+from repro.training.train_step import make_train_step
+
+SEQ, BATCH, STEPS, VOCAB = 32, 8, 100, 256
+W_TOTAL = 16
+RATIOS = [0.382, 0.5, 0.618]
+
+
+def run(emit) -> None:
+    ppls = []
+    for ratio in RATIOS:
+        w_oh = max(2, round(W_TOTAL * ratio / 2) * 2)
+        w_og = W_TOTAL - w_oh
+        seq = w_og * 4                  # chunk count fixed across ratios
+        cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                      vocab_size=VOCAB,
+                      tconst=TConstConfig(w_oh=w_oh, w_og=w_og, h=2))
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        opt_cfg = AdamWConfig(lr=3e-3)
+        opt = init_opt_state(params, opt_cfg)
+        step = jax.jit(make_train_step(api, opt_cfg,
+                                       warmup_cosine(10, STEPS)),
+                       donate_argnums=(0, 1))
+        dc = DataConfig(vocab_size=VOCAB, seq_len=seq, batch_size=BATCH,
+                        seed=0)
+        for b in batches(dc, steps=STEPS):
+            params, opt, _ = step(
+                params, opt, {"tokens": jnp.asarray(b["tokens"][:, :seq])})
+        loss_fn = jax.jit(lambda p, bt: api.loss(p, bt)[0])
+        ces = [float(loss_fn(params,
+                             {"tokens": jnp.asarray(b["tokens"][:, :seq])}))
+               for b in batches(dc, epoch=77, steps=6)]
+        ppl = math.exp(float(np.mean(ces)))
+        ppls.append(ppl)
+        emit(f"ablation_ratio_ppl/{ratio}", ppl,
+             f"W_oh={w_oh} W_og={w_og} (paper 512-512-{ratio})")
+    spread = (max(ppls) - min(ppls)) / min(ppls)
+    emit("ablation_ratio_ppl_spread", 100.0 * spread,
+         "percent; paper finding: stable within a very small range")

@@ -1,0 +1,56 @@
+"""Paper Eq. (4)/(5) validation via COMPILED FLOP counts (rigorous, not
+wall-clock): lower+compile the decode step at several context lengths and
+read XLA's per-step flops.
+
+* TConst cache-hit step: flops must be INDEPENDENT of N  (Eq. 5)
+* TConst resync (cache miss): flops must be LINEAR in N  (Eq. 4)
+* Baseline decode step: flops grow linearly in N (attention reads)
+
+The layer scan's trip count is constant across N, so XLA's
+count-body-once behaviour cancels in these comparisons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config, reduced
+from repro.models.api import build_model
+
+N_SWEEP = [512, 1024, 2048, 4096]
+
+
+def _compiled_flops(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    return float(c.cost_analysis().get("flops", 0.0))
+
+
+def run(emit) -> None:
+    for mode in ("full", "tconst"):
+        cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                      attention_mode=mode)
+        api = build_model(cfg)
+        params_s = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        hits, misses = [], []
+        for n in N_SWEEP:
+            cache_s = api.cache_specs(1, n)
+            tok_s = jax.ShapeDtypeStruct((1,), jnp.int32)
+            f_hit = _compiled_flops(
+                lambda p, c, t: api.decode_step(p, c, t),
+                params_s, cache_s, tok_s)
+            hits.append(f_hit)
+            emit(f"eq5_decode_flops/{mode}/N={n}", f_hit, "per-step flops")
+            if mode == "tconst":
+                f_miss = _compiled_flops(
+                    lambda p, c: api.resync(p, c), params_s, cache_s)
+                misses.append(f_miss)
+                emit(f"eq4_resync_flops/N={n}", f_miss, "per-miss flops")
+        ratio = hits[-1] / hits[0]
+        emit(f"decode_flops_scaling/{mode}", ratio,
+             f"flops(N={N_SWEEP[-1]})/flops(N={N_SWEEP[0]}); "
+             f"{'O(1) expected ~1.0' if mode == 'tconst' else 'O(N) grows'}")
+        if misses:
+            lin = (misses[-1] / misses[0]) / (N_SWEEP[-1] / N_SWEEP[0])
+            emit("resync_flops_linearity", lin,
+                 "ratio/(N ratio); ~1.0 = strictly linear (Eq. 4)")

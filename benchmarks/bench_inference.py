@@ -1,0 +1,82 @@
+"""Paper Fig. 8: inference latency, cache-hit/miss split, KV-cache memory,
+and speedup ratios vs context length N, for Base / TLinFormer /
+TConstFormer at matched (reduced) scale on CPU.
+
+Validates the paper's qualitative claims at reduced scale:
+  (a-c) hit latency: baseline grows with N, TLin grows (gentler),
+        TConst is FLAT;
+  (g)   KV cache: baseline/TLin O(N), TConst O(1);
+  (h-i) hit-step speedup of TConst over Base / TLin grows with N.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config, reduced
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+
+N_SWEEP = [256, 512, 1024, 2048]
+GEN = 10
+
+
+def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
+    eng = Engine(api, params, max_len=max_len)
+    batch = {"tokens": jnp.ones((1, prompt_len), jnp.int32)}
+    eng.generate(batch, GEN, record_stats=True)       # includes compile
+    eng.stats.clear()
+    eng.generate(batch, GEN, record_stats=True)       # timed run
+    hits = [s.seconds for s in eng.stats if s.kind == "hit"]
+    misses = [s.seconds for s in eng.stats if s.kind == "miss"]
+    prefill = [s.seconds for s in eng.stats if s.kind == "prefill"]
+    return {
+        "hit_ms": 1e3 * float(np.median(hits)) if hits else float("nan"),
+        "miss_ms": 1e3 * float(np.median(misses)) if misses else
+                   1e3 * float(prefill[0]),           # baseline: full pass
+        "cache_bytes": eng.cache_bytes(1),
+    }
+
+
+def run(emit) -> None:
+    variants = {
+        "base": reduced(get_config("tconst_41m"), dtype="float32",
+                        attention_mode="full"),
+        "tlin": reduced(get_config("tconst_41m"), dtype="float32",
+                        attention_mode="tlin"),
+        "tconst": reduced(get_config("tconst_41m"), dtype="float32"),
+    }
+    results: Dict[str, List[Dict]] = {}
+    for name, cfg in variants.items():
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        rows = []
+        for n in N_SWEEP:
+            r = _time_steps(api, params, n, n + GEN + 64)
+            rows.append(r)
+            emit(f"fig8_latency/{name}/N={n}/hit", r["hit_ms"] * 1e3,
+                 f"miss_ms={r['miss_ms']:.1f}")
+            emit(f"fig8_memory/{name}/N={n}", r["cache_bytes"],
+                 "kv_cache_bytes")
+        results[name] = rows
+
+    # derived paper claims ---------------------------------------------------
+    tc = results["tconst"]
+    flat = tc[-1]["hit_ms"] / max(tc[0]["hit_ms"], 1e-9)
+    emit("fig8c_tconst_hit_flatness", flat,
+         "hit(Nmax)/hit(Nmin); ~1.0 = constant-time (paper: horizontal)")
+    cache_ratio = tc[-1]["cache_bytes"] / tc[0]["cache_bytes"]
+    emit("fig8g_tconst_cache_O1", cache_ratio, "must be 1.0")
+    for other in ("base", "tlin"):
+        o = results[other]
+        grow = o[-1]["cache_bytes"] / o[0]["cache_bytes"]
+        emit(f"fig8g_{other}_cache_growth", grow, "grows with N")
+        sp_small = o[0]["hit_ms"] / tc[0]["hit_ms"]
+        sp_big = o[-1]["hit_ms"] / tc[-1]["hit_ms"]
+        emit(f"fig8hi_speedup_vs_{other}/N={N_SWEEP[0]}", sp_small, "x")
+        emit(f"fig8hi_speedup_vs_{other}/N={N_SWEEP[-1]}", sp_big,
+             "x (paper: grows with N)")

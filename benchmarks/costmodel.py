@@ -1,0 +1,338 @@
+"""Analytic cost model: implementation FLOPs / HBM bytes / collective
+bytes per (arch, shape, mesh) — the primary inputs to §Roofline.
+
+Why analytic?  XLA's ``compiled.cost_analysis()`` counts each while-loop
+body ONCE (verified experimentally — see EXPERIMENTS.md §Dry-run notes),
+so any scanned graph (layer scan, microbatch scan, flash block scans) is
+undercounted by the trip count.  We control every matmul in this
+framework, so the analytic numbers are exact for compute and principled
+estimates for memory/collectives; the HLO numbers are reported alongside
+as per-iteration sanity values.
+
+Conventions:
+* "impl FLOPs" counts what the kernels actually execute (the blocked
+  attention computes full L x L blocks without causal block-skipping —
+  that inefficiency is part of the implementation and appears here).
+* All quantities are GLOBAL totals; ``per_device`` divides by chips.
+* Train counts fwd + bwd (2x fwd) + remat recompute (1x fwd) = 4x fwd.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.config import ModelConfig, ShapeConfig, get_shape
+
+# --- TPU v5e hardware constants (assignment) -------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+BYTES = 2                    # bf16 activations/params on the hot path
+
+TRAIN_FACTOR = 4.0           # fwd + bwd(2x) + remat recompute(1x)
+MOE_CAP = 1.25
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float             # global FLOPs for one step
+    hbm_bytes: float         # global HBM traffic for one step
+    coll_bytes: float        # global collective bytes for one step
+    model_flops: float       # 6*N_active*tokens (train) / 2*N_active*T (inf)
+
+    def per_device(self, chips: int) -> "Costs":
+        return Costs(self.flops / chips, self.hbm_bytes / chips,
+                     self.coll_bytes / chips, self.model_flops / chips)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counts
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> float:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.is_moe:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        routed = cfg.n_experts_per_tok if active_only else cfg.n_experts
+        ffn = 3 * d * fe * routed + 3 * d * fe * cfg.n_shared_experts \
+            + d * cfg.n_experts
+        dense_ffn = 3 * d * cfg.d_ff * cfg.first_dense_layers
+        per_layer = attn + ffn
+        total = per_layer * (cfg.n_layers - cfg.first_dense_layers) + \
+            (attn + 3 * d * cfg.d_ff) * cfg.first_dense_layers
+    elif cfg.arch_type == "ssm":
+        dims_inner = cfg.ssm_expand * d
+        nh = cfg.ssm_heads or dims_inner // (cfg.ssm_head_dim or 64)
+        proj = d * (2 * dims_inner + 2 * cfg.ssm_state + nh) + dims_inner * d
+        total = proj * cfg.n_layers
+    else:
+        ffn = 3 * d * cfg.d_ff if cfg.d_ff else 0
+        per_layer = attn + ffn
+        if cfg.hybrid_parallel:
+            dims_inner = cfg.ssm_expand * d
+            nh = dims_inner // (cfg.ssm_head_dim or 64)
+            per_layer += d * (2 * dims_inner + 2 * cfg.ssm_state + nh) \
+                + dims_inner * d
+        total = per_layer * cfg.n_layers
+        if cfg.is_encdec:
+            total += (attn * 2 + 2 * d * cfg.d_ff) * cfg.encoder_layers
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return float(total + emb)
+
+
+# ---------------------------------------------------------------------------
+# Forward FLOPs per token (full-sequence teacher-forced pass)
+# ---------------------------------------------------------------------------
+
+
+def _attn_ctx(cfg: ModelConfig, L: int) -> float:
+    """Average attended context per token as the blocked impl executes it
+    (no causal block-skipping -> full L; sliding window -> w + block)."""
+    from repro.models.lm import layer_windows
+    ws = [int(w) for w in layer_windows(cfg)]
+    ctxs = [float(min(L, (w + 512)) if w > 0 else L) for w in ws]
+    return sum(ctxs) / len(ctxs)
+
+
+def fwd_flops_per_token(cfg: ModelConfig, L: int) -> float:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    f = 0.0
+    n_moe = cfg.n_layers - cfg.first_dense_layers if cfg.is_moe \
+        else 0
+    n_dense_ffn = cfg.n_layers - n_moe if not cfg.arch_type == "ssm" else 0
+
+    if cfg.arch_type == "ssm":
+        di = cfg.ssm_expand * d
+        nh = cfg.ssm_heads or di // (cfg.ssm_head_dim or 64)
+        P = cfg.ssm_head_dim or 64
+        N = cfg.ssm_state
+        Q = cfg.ssm_chunk
+        per = 2 * d * (2 * di + 2 * N + nh) + 2 * di * d    # projections
+        per += nh * (2 * Q * N + 2 * Q * P + 2 * N * P * 2)  # SSD core
+        return per * cfg.n_layers + 2 * d * cfg.vocab_size
+
+    attn_proj = 2 * d * hd * (2 * H + 2 * KV)
+    attn_ctx = 4 * _attn_ctx(cfg, L) * H * hd
+    per_layer = attn_proj + attn_ctx
+    if cfg.hybrid_parallel:
+        di = cfg.ssm_expand * d
+        nh = di // (cfg.ssm_head_dim or 64)
+        P, N, Q = cfg.ssm_head_dim or 64, cfg.ssm_state, cfg.ssm_chunk
+        per_layer += 2 * d * (2 * di + 2 * N + nh) + 2 * di * d + \
+            nh * (2 * Q * N + 2 * Q * P + 4 * N * P)
+    f += per_layer * cfg.n_layers
+
+    if cfg.is_moe:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        k = cfg.n_experts_per_tok * MOE_CAP
+        per_moe = (2 * d * cfg.n_experts          # router
+                   + 4 * d * k                    # dispatch/combine einsums
+                   + 6 * d * fe * k               # routed experts
+                   + 6 * d * fe * cfg.n_shared_experts)
+        f += per_moe * n_moe + 6 * d * cfg.d_ff * cfg.first_dense_layers
+    else:
+        f += 6 * d * cfg.d_ff * n_dense_ffn if cfg.d_ff else 0
+
+    if cfg.is_encdec:
+        # encoder runs once per sequence: amortise over decoder tokens
+        enc_per_tok = (cfg.encoder_seq / max(1, L)) * cfg.encoder_layers * (
+            2 * d * hd * (2 * H + 2 * KV) + 4 * cfg.encoder_seq * H * hd
+            + 4 * d * cfg.d_ff)
+        # decoder cross-attention: proj + T_enc context
+        cross = cfg.n_layers * (2 * d * hd * (2 * H + 2 * KV)
+                                + 4 * cfg.encoder_seq * H * hd)
+        f += enc_per_tok + cross
+
+    if cfg.attention_mode in ("tconst", "tlin"):
+        f += tconst_extra_fwd_per_token(cfg, L)
+    return f + 2 * d * cfg.vocab_size                 # lm head
+
+
+def tconst_extra_fwd_per_token(cfg: ModelConfig, L: int) -> float:
+    """Paper Eq. (4) context-path terms, amortised per token, times the
+    number of stacked blocks (the gen-path causal/cross terms are already
+    covered by the per-layer accounting above, with ctx<=W windows)."""
+    tc = cfg.tconst
+    d = cfg.d_model
+    nb = cfg.tconst_blocks
+    # per chunk of W_og tokens: compress + restore 2*D*N*W_oh (N = avg L/2)
+    per_chunk = 2 * d * (L / 2) * tc.w_oh * 2 + tc.h * d * tc.w_oh ** 2
+    return nb * per_chunk / tc.w_og
+
+
+# ---------------------------------------------------------------------------
+# Step-level costs per shape kind
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_bytes_global(cfg: ModelConfig, B: int, S: int) -> float:
+    kvb = cfg.n_kv_heads * cfg.resolved_head_dim * BYTES
+    if cfg.attention_mode in ("tconst", "tlin") and cfg.arch_type not in (
+            "ssm", "audio"):
+        tc = cfg.tconst
+        per_block = 2 * B * kvb * ((tc.h + 1) * tc.w_oh + (tc.h + 2) * tc.w_og)
+        base = cfg.tconst_blocks * per_block
+        if cfg.attention_mode == "tlin":
+            base += cfg.tconst_blocks * 2 * B * S * kvb
+        return base
+    if cfg.arch_type == "ssm":
+        di = cfg.ssm_expand * cfg.d_model
+        nh = cfg.ssm_heads or di // (cfg.ssm_head_dim or 64)
+        st = nh * (cfg.ssm_head_dim or 64) * cfg.ssm_state * 4
+        conv = (cfg.ssm_conv - 1) * (di + 2 * cfg.ssm_state) * BYTES
+        return cfg.n_layers * B * (st + conv)
+    layers = cfg.n_layers
+    base = 2.0 * B * S * kvb * layers
+    if cfg.hybrid_parallel:
+        di = cfg.ssm_expand * cfg.d_model
+        nh = di // (cfg.ssm_head_dim or 64)
+        base += cfg.n_layers * B * nh * (cfg.ssm_head_dim or 64) * \
+            cfg.ssm_state * 4
+    if cfg.is_encdec:
+        base += 2.0 * B * cfg.encoder_seq * kvb * layers
+    return base
+
+
+def step_costs(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+               opt_bytes_per_param: float = 8.0) -> Costs:
+    B, L = shape.global_batch, shape.seq_len
+    n_params = param_count(cfg)
+    n_active = param_count(cfg, active_only=True)
+    p_local = n_params * BYTES / chips            # sharded params
+
+    if shape.kind == "train":
+        T = B * L
+        flops = fwd_flops_per_token(cfg, L) * T * TRAIN_FACTOR
+        model_flops = 6.0 * n_active * T
+        # HBM: 3 param reads (fwd/bwd/remat) * n_micro-ish amortised as 3,
+        # optimizer state r/w, plus activation traffic ~ 12*T*d per layer.
+        hbm = 3 * n_params * BYTES + 3 * n_params * opt_bytes_per_param \
+            + 12.0 * T * cfg.d_model * BYTES * cfg.n_layers
+        # collectives: 2 TP all-reduces/layer fwd, x3 with bwd, of (T, d);
+        # + grad reduce (2x params) + 3 FSDP all-gathers of params
+        coll = 3 * 2 * cfg.n_layers * T * cfg.d_model * BYTES \
+            + 2 * n_params * BYTES + 3 * n_params * BYTES
+        if cfg.is_moe:
+            coll += 4 * T * cfg.d_model * BYTES * (
+                cfg.n_layers - cfg.first_dense_layers)   # all-to-all there+back
+        return Costs(flops, hbm, coll, model_flops)
+
+    if shape.kind == "prefill":
+        T = B * L
+        flops = fwd_flops_per_token(cfg, L) * T
+        model_flops = 2.0 * n_active * T
+        hbm = n_params * BYTES + 6.0 * T * cfg.d_model * BYTES * cfg.n_layers \
+            + kv_cache_bytes_global(cfg, B, L)
+        coll = 2 * cfg.n_layers * T * cfg.d_model * BYTES
+        if cfg.is_moe:
+            coll += 4 * T * cfg.d_model * BYTES * cfg.n_layers
+        return Costs(flops, hbm, coll, model_flops)
+
+    # decode: ONE token per sequence against an L-token cache
+    flops = decode_flops_per_step(cfg, L) * B
+    model_flops = 2.0 * n_active * B
+    hbm = n_params * BYTES + decode_cache_read_bytes(cfg, B, L)
+    coll = 2 * cfg.n_layers * B * cfg.d_model * BYTES
+    if cfg.is_moe:
+        coll += 4 * B * cfg.d_model * BYTES * cfg.n_layers
+    return Costs(flops, hbm, coll, model_flops)
+
+
+def decode_flops_per_step(cfg: ModelConfig, S: int) -> float:
+    """Per-sequence FLOPs of one serve_step (cache-hit for tconst)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    if cfg.arch_type == "ssm":
+        di = cfg.ssm_expand * d
+        nh = cfg.ssm_heads or di // (cfg.ssm_head_dim or 64)
+        P, N = cfg.ssm_head_dim or 64, cfg.ssm_state
+        per = 2 * d * (2 * di + 2 * N + nh) + 2 * di * d + nh * 4 * P * N
+        return per * cfg.n_layers + 2 * d * cfg.vocab_size
+
+    if cfg.attention_mode in ("tconst", "tlin") and cfg.arch_type != "audio":
+        # paper Eq. (5): (H+1) D W_oh + (H+2) D W_og per block (attention
+        # reads), plus all projections/FFNs at 1 token
+        tc = cfg.tconst
+        nb = cfg.tconst_blocks
+        attn_reads = nb * (4 * (tc.h + 1) * H * hd * tc.w_oh +
+                           4 * (tc.h + 2) * H * hd * tc.w_og)
+        proj = cfg.n_layers * (2 * d * hd * (2 * H + 2 * KV) * 2)  # self+cross
+        ffn = cfg.n_layers * 6 * d * cfg.d_ff
+        if cfg.attention_mode == "tlin":
+            attn_reads += nb * 4 * H * hd * S          # O(N) history reads
+        return attn_reads + proj + ffn + 2 * d * cfg.vocab_size
+
+    from repro.models.lm import layer_windows
+    ws = [int(w) for w in layer_windows(cfg)]
+    ctx = [float(min(S, w) if w > 0 else S) for w in ws]
+    attn = sum(4.0 * c * H * hd for c in ctx)
+    proj = cfg.n_layers * 2 * d * hd * (2 * H + 2 * KV)
+    if cfg.is_moe:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        ffn = (cfg.n_layers - cfg.first_dense_layers) * (
+            6 * d * fe * cfg.n_experts_per_tok
+            + 6 * d * fe * cfg.n_shared_experts) \
+            + cfg.first_dense_layers * 6 * d * cfg.d_ff
+    else:
+        ffn = cfg.n_layers * 6 * d * cfg.d_ff if cfg.d_ff else 0
+    extra = 0.0
+    if cfg.hybrid_parallel:
+        di = cfg.ssm_expand * d
+        nh = di // (cfg.ssm_head_dim or 64)
+        extra = cfg.n_layers * (2 * d * (2 * di + 2 * cfg.ssm_state + nh)
+                                + 2 * di * d)
+    if cfg.is_encdec:
+        extra += cfg.n_layers * (2 * d * hd * (2 * H + 2 * KV)
+                                 + 4 * cfg.encoder_seq * H * hd)
+    return attn + proj + ffn + extra + 2 * d * cfg.vocab_size
+
+
+def decode_cache_read_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    """HBM bytes read from the KV cache by one decode step — the paper's
+    central quantity: O(1) for tconst, O(S) for the baseline."""
+    if cfg.attention_mode in ("tconst", "tlin") and cfg.arch_type not in (
+            "ssm", "audio"):
+        base = kv_cache_bytes_global(cfg, B, 10**9)   # constant part
+        if cfg.attention_mode == "tlin":
+            kvb = cfg.n_kv_heads * cfg.resolved_head_dim * BYTES
+            base += cfg.tconst_blocks * 2 * B * S * kvb
+        return base
+    if cfg.arch_type == "ssm":
+        return kv_cache_bytes_global(cfg, B, S)
+    from repro.models.lm import layer_windows
+    kvb = cfg.n_kv_heads * cfg.resolved_head_dim * BYTES
+    ws = [int(w) for w in layer_windows(cfg)]
+    per_layer = [2.0 * B * (min(S, w) if w > 0 else S) * kvb for w in ws]
+    return float(sum(per_layer))
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+def roofline(cfg: ModelConfig, shape: ShapeConfig, chips: int = 256,
+             hlo: Optional[Dict] = None) -> Dict[str, float]:
+    c = step_costs(cfg, shape, chips).per_device(chips)
+    t_comp = c.flops / PEAK_FLOPS
+    t_mem = c.hbm_bytes / HBM_BW
+    t_coll = c.coll_bytes / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    out = {
+        "flops_per_dev": c.flops, "hbm_bytes_per_dev": c.hbm_bytes,
+        "coll_bytes_per_dev": c.coll_bytes,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": c.model_flops,
+        "useful_flops_ratio": c.model_flops / max(1.0, c.flops),
+        "bound_step_s": max(t_comp, t_mem, t_coll),
+    }
+    if hlo:
+        out["hlo_flops_per_dev"] = hlo.get("cost", {}).get("flops", 0.0)
+        out["hlo_coll_bytes_per_dev"] = hlo.get(
+            "collectives", {}).get("total", 0.0)
+    return out

@@ -1,0 +1,80 @@
+"""§Roofline report generator: merges the dry-run JSON (memory_analysis,
+HLO cost, parsed collectives) with the analytic cost model into the
+per-(arch x shape x mesh) roofline table (markdown + CSV).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline \\
+      --dryrun experiments/dryrun_single_pod.json \\
+      --out experiments/roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.config import get_shape
+from repro.launch.dryrun import plan_config
+from benchmarks.costmodel import roofline
+
+HBM_PER_CHIP = 16 * 2**30      # v5e
+
+
+def build_rows(dryrun: List[Dict], chips: int) -> List[Dict]:
+    rows = []
+    for rec in dryrun:
+        if "error" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec["error"]})
+            continue
+        cfg = plan_config(rec["arch"], get_shape(rec["shape"]))
+        r = roofline(cfg, get_shape(rec["shape"]), chips=chips, hlo=rec)
+        r.update(arch=rec["arch"], shape=rec["shape"],
+                 mode=rec["attention_mode"],
+                 peak_gib=rec["memory"]["peak_bytes_est"] / 2**30,
+                 fits=rec["memory"]["peak_bytes_est"] <= HBM_PER_CHIP,
+                 compile_s=rec.get("compile_s"))
+        rows.append(r)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mode | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | useful/impl | peak GiB | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                       f"{r['error'][:60]} | | | | | | | |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {r['peak_gib']:.2f} "
+            f"| {'yes' if r['fits'] else 'NO'} |\n")
+    return "".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun_single_pod.json")
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args(argv)
+    with open(args.dryrun) as f:
+        dryrun = json.load(f)
+    rows = build_rows(dryrun, args.chips)
+    md = to_markdown(rows)
+    with open(args.out, "w") as f:
+        f.write(md)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

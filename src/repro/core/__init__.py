@@ -1,0 +1,1 @@
+from repro.core import tconst  # noqa: F401

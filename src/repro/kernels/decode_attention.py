@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the O(1) cache-hit decode step (paper Eq. 5).
+
+One new query token attends over a *constant-size* KV buffer — the
+compressed context (W_oh slots) or the generation window (W_og slots).
+Because TConstFormer bounds both, the ENTIRE working set of a decode step
+fits VMEM by construction: q (G x D), K/V (S x D) with S = W_oh <= 512.
+This kernel is the TPU restatement of the paper's core claim — the decode
+step never touches an O(N) buffer, so it cannot be HBM-bandwidth bound in
+sequence length.
+
+Grid: (B, KV) — fully parallel; no sequential dimension, no scratch.
+The QK^T contraction, masked softmax, and PV contraction are fused in one
+kernel invocation per (batch, kv-head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, *, softcap: float):
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (S, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # (S, D)
+    vl = vl_ref[0, 0]                                  # scalar int32
+
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (G, S)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    slot = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = slot < vl
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (o / (l + 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid_len: jax.Array, *, softcap: float = 0.0,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, D) one token per sequence; k/v: (B, S, KV, D);
+    valid_len: (B,) — slots [0, valid_len) attended.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    vl = valid_len.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),            # valid_len
+            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # k
+            pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="tconst_decode_attention",
+    )(vl, qg, k, v)
+    return out.reshape(B, H, D)

@@ -1,0 +1,112 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Routing policy
+--------------
+* On TPU (``jax.default_backend() == "tpu"``): Pallas kernels, compiled.
+* Elsewhere (this CPU container, and the dry-run which lowers pure XLA):
+  - ``repro.kernels.xla_flash`` for big attention (same blocked algorithm,
+    plain XLA ops, differentiable);
+  - the pure-jnp references for small shapes.
+* ``repro.runtime.flags.use_pallas`` + ``pallas_interpret`` force the
+  Pallas path in interpret mode (used by the kernel test sweeps).
+
+``flash`` is differentiable everywhere: on the Pallas path the forward
+runs the TPU kernel and the backward falls back to the XLA blocked
+implementation via ``jax.custom_vjp`` (the production bwd kernel is the
+listed follow-up in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.kernels import ref as REF
+from repro.kernels import xla_flash as XF
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_fwd_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _pallas_enabled() -> bool:
+    return runtime.flags.use_pallas or jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return runtime.flags.pallas_interpret and jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash_pallas_diff(q, k, v, q_pos, k_pos, causal, window, softcap):
+    return flash_attention_fwd_pallas(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        softcap=softcap, interpret=_interpret())
+
+
+def _fp_fwd(q, k, v, q_pos, k_pos, causal, window, softcap):
+    o = _flash_pallas_diff(q, k, v, q_pos, k_pos, causal, window, softcap)
+    return o, (q, k, v, q_pos, k_pos)
+
+
+def _fp_bwd(causal, window, softcap, res, do):
+    q, k, v, q_pos, k_pos = res
+    # backward via the (differentiable) XLA blocked implementation
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: XF.flash_attention(
+            q_, k_, v_, q_pos, k_pos, window, causal, softcap, 256, 512),
+        q, k, v)
+    dq, dk, dv = vjp(do)
+    return dq, dk, dv, None, None
+
+
+_flash_pallas_diff.defvjp(_fp_fwd, _fp_bwd)
+
+
+def flash(q: jax.Array, k: jax.Array, v: jax.Array,
+          q_pos: jax.Array, k_pos: jax.Array,
+          window: "int | jax.Array" = 0, causal: bool = True,
+          softcap: float = 0.0) -> jax.Array:
+    """Dispatching flash attention (see module docstring)."""
+    static_window = isinstance(window, int)
+    if _pallas_enabled() and static_window and \
+            q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+        return _flash_pallas_diff(q, k, v, q_pos, k_pos, causal, window,
+                                  softcap)
+    return XF.flash_attention(q, k, v, q_pos, k_pos, window, causal,
+                              softcap, 512, 512)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (O(1) cache-hit step)
+# ---------------------------------------------------------------------------
+
+
+def decode_attend_kv(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, softcap: float = 0.0
+                     ) -> jax.Array:
+    """q: (B, H, D); k/v: (B, S, KV, D); valid_len (B,)."""
+    if _pallas_enabled() and q.shape[-1] % 8 == 0:
+        return decode_attention_pallas(q, k, v, valid_len, softcap=softcap,
+                                       interpret=_interpret())
+    return REF.decode_reference(q, k, v, valid_len, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, a, b, c, chunk, init_state=None):
+    if _pallas_enabled():
+        return ssd_scan_pallas(x, dt, a, b, c, chunk, init_state,
+                               interpret=_interpret())
+    from repro.layers.ssm import ssd_chunked
+    return ssd_chunked(x, dt, a, b, c, chunk, init_state)

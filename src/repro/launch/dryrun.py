@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/initialisation: the dry-run builds the
+#   production 16x16 (and 2x16x16) mesh out of 512 host placeholder
+#   devices.  Never set this in conftest/pyproject — tests see 1 device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) pair this lowers + compiles the
+appropriate step function against the production mesh with
+ShapeDtypeStruct stand-ins (no allocation), then records:
+
+  * memory_analysis()   — per-device argument/temp bytes (proves it fits)
+  * cost_analysis()     — per-device HLO FLOPs / bytes (roofline inputs)
+  * collective bytes    — parsed from the partitioned HLO text
+
+Shape kinds map to functions: train_* -> train_step (fwd+bwd+AdamW,
+microbatched), prefill_* -> prefill, decode_* -> serve_step (ONE token
+against a seq_len cache).  long_500k applies the DESIGN.md §4 policy:
+SSM/hybrid run natively, native-SWA archs run their sliding variant, and
+pure full-attention archs run attention_mode="tconst" — the paper's O(1)
+mechanism is precisely what makes a 524k-token decode state lowerable.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (INPUT_SHAPES, ModelConfig, ShapeConfig, get_config,
+                          get_shape, list_archs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import ModelAPI, build_model
+from repro.sharding import rules
+from repro.training.optim import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+ASSIGNED_ARCHS = [
+    "mixtral-8x22b", "llama3-405b", "mamba2-130m", "deepseek-moe-16b",
+    "smollm-360m", "minicpm-2b", "hymba-1.5b", "whisper-small",
+    "gemma3-4b", "qwen2-vl-2b",
+]
+
+# ---------------------------------------------------------------------------
+# Per-(arch, shape) policy
+# ---------------------------------------------------------------------------
+
+BIG_D_MODEL = 4096           # bf16 params + bf16 opt state + fsdp above this
+
+
+def plan_config(arch: str, shape: ShapeConfig) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape.name == "long_500k":
+        if cfg.arch_type in ("ssm", "hybrid"):
+            pass                                    # recurrent state: native
+        elif cfg.sliding_window > 0:
+            cfg = cfg.replace(attention_mode="sliding") \
+                if cfg.local_global_ratio == 0 else cfg   # gemma3 keeps 5:1
+        else:
+            # pure full attention: the paper's technique is the enabler
+            cfg = cfg.replace(attention_mode="tconst")
+    if shape.kind == "train" and cfg.d_model >= BIG_D_MODEL:
+        cfg = cfg.replace(param_dtype="bfloat16")
+    return cfg
+
+
+def plan_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      dsize: int = 16) -> int:
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= BIG_D_MODEL:
+        want = 16
+    elif cfg.d_model >= 2048:
+        want = 8
+    else:
+        want = 4   # even small models: bounded-activation microbatches
+    # each microbatch must still shard over the full data extent
+    # (multi-pod: dsize=32; mb < dsize replicates activations — measured
+    # 2x peak regression on mixtral multi-pod before this clamp)
+    return max(1, min(want, shape.global_batch // dsize))
+
+
+def _opt_cfg(cfg: ModelConfig) -> AdamWConfig:
+    big = cfg.d_model >= BIG_D_MODEL
+    # §Perf H1 it5: factored second moment for the HBM-edge configs —
+    # optimizer state shrinks from 2x params to ~1x params (+ epsilon).
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32",
+                       factored=big)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective audit
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:\w+\[[^\]]*\](?:\{[^}]*\})?,?\s*)+|\([^)]*\))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DT_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+             "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+             "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand bytes of every collective op in the partitioned
+    module, by op kind.  Per-device quantities (SPMD module is local)."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DT_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DT_BYTES[dt]
+        out[op] = out.get(op, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering builders
+# ---------------------------------------------------------------------------
+
+
+def build_lowered(arch: str, shape_name: str, mesh,
+                  verbose: bool = True) -> Tuple[Any, Dict[str, Any]]:
+    shape = get_shape(shape_name)
+    cfg = plan_config(arch, shape)
+    api = build_model(cfg)
+    fsdp = cfg.d_model >= BIG_D_MODEL
+    # NOTE: seq_parallel=True was tried for the HBM-edge train configs and
+    # REFUTED as a blanket constraint: peak stayed ~52 GiB while collective
+    # bytes exploded 7->72 GiB/device (naive constraint placement forces an
+    # all-gather at every attention).  See EXPERIMENTS.md §Perf iteration 3.
+    rules.set_activation_context(mesh, seq_parallel=False)
+
+    param_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    param_bytes = sum(np.prod(l.shape) * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(param_shapes))
+    # §Perf H2: for small models at PREFILL, tensor-parallel weight
+    # sharding only buys per-layer all-reduces of full activations (the
+    # most collective-bound pair, mamba2 prefill_32k, spent ~50% of its
+    # roofline there).  Below 2 GiB of weights, replicate and keep pure
+    # data parallelism.  DECODE keeps TP: it is parameter-read bound, and
+    # replication multiplies per-device HBM traffic by the mesh size
+    # (measured 500x worse t_mem on smollm long_500k — §Perf H2 it2,
+    # refuted there).
+    replicate_params = (shape.kind == "prefill"
+                        and param_bytes <= 2 * 2**30
+                        and shape.global_batch % 16 == 0)
+    if replicate_params:
+        param_sh = jax.tree_util.tree_map(
+            lambda _: rules.replicated(mesh), param_shapes)
+    else:
+        param_sh = rules.param_shardings(param_shapes, mesh, fsdp=fsdp)
+    info: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "attention_mode": cfg.attention_mode,
+        "param_count": int(sum(np.prod(l.shape) for l in
+                               jax.tree_util.tree_leaves(param_shapes))),
+        "fsdp": fsdp,
+    }
+
+    if shape.kind == "train":
+        opt_cfg = _opt_cfg(cfg)
+        dsize = rules._axis_size(mesh, rules.data_axes(mesh))
+        n_micro = plan_microbatches(cfg, shape, dsize)
+        info["n_micro"] = n_micro
+        opt_shapes = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), param_shapes)
+        opt_sh = rules.opt_shardings(param_sh, opt_shapes, mesh, fsdp=fsdp)
+        batch_specs = api.input_specs(shape)
+        batch_sh = rules.batch_shardings(batch_specs, mesh)
+        big = cfg.d_model >= BIG_D_MODEL
+        step = make_train_step(
+            api, opt_cfg, n_micro=n_micro,
+            accum_dtype="bfloat16" if big else "float32",
+            grad_shardings=param_sh)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, batch_specs)
+        return lowered, info
+
+    if shape.kind == "prefill":
+        batch_specs = api.input_specs(shape)
+        batch_sh = rules.batch_shardings(batch_specs, mesh)
+        cache_shapes = api.cache_specs(shape.global_batch, shape.seq_len)
+        cache_sh = rules.cache_shardings(cache_shapes, mesh,
+                                         shape.global_batch)
+        fn = lambda p, b: api.prefill(p, b, shape.seq_len)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(param_shapes, batch_specs)
+        return lowered, info
+
+    # decode: serve_step = ONE new token against a seq_len cache
+    B = shape.global_batch
+    cache_shapes = api.cache_specs(B, shape.seq_len)
+    cache_sh = rules.cache_shardings(cache_shapes, mesh, B)
+    token_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    dsize = rules._axis_size(mesh, rules.data_axes(mesh))
+    tok_sh = rules.batch_shardings({"t": token_spec}, mesh)["t"]
+    serve_step = lambda p, c, t: api.decode_step(p, c, t)
+    with mesh:
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, cache_sh, tok_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        ).lower(param_shapes, cache_shapes, token_spec)
+    return lowered, info
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            verbose: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, info = build_lowered(arch, shape_name, mesh, verbose)
+    info["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    info["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_est": int(mem.argument_size_in_bytes +
+                              mem.temp_size_in_bytes +
+                              mem.output_size_in_bytes -
+                              mem.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis()
+    info["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    info["collectives"] = collective_bytes(compiled.as_text())
+    if verbose:
+        mb = info["memory"]["peak_bytes_est"] / 2**30
+        print(f"[dryrun] {arch:18s} {shape_name:12s} mesh={info['mesh']:9s} "
+              f"mode={info['attention_mode']:7s} "
+              f"peak/dev={mb:7.2f}GiB flops/dev={info['cost']['flops']:.3e} "
+              f"coll/dev={info['collectives']['total']/2**20:9.1f}MiB "
+              f"compile={info['compile_s']:.1f}s", flush=True)
+    return info
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    results = []
+    failures = 0
+    for arch, shape in pairs:
+        try:
+            results.append(run_one(arch, shape, multi_pod=args.multi_pod))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"[dryrun] {arch} {shape} FAILED: {type(e).__name__}: {e}",
+                  flush=True)
+            results.append({"arch": arch, "shape": shape, "error": str(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    print(f"[dryrun] done: {len(pairs) - failures}/{len(pairs)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

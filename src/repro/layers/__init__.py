@@ -1,0 +1,1 @@
+from repro.layers import attention, common, embed, mlp, moe, rope, ssm  # noqa: F401

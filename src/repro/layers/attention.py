@@ -1,0 +1,226 @@
+"""Grouped-query attention with causal / sliding / full / cross variants.
+
+This is the reference (pure-jnp) attention used everywhere by default; the
+perf-critical paths can be routed through the Pallas kernels in
+``repro.kernels`` via ``repro.runtime.flags.use_pallas``.
+
+All attention in the paper is the same softmax(QK^T/sqrt(d))V primitive with
+different connection patterns (paper Fig. 2); we expose that as a ``mask``
+argument so the TConstFormer core can compose its four patterns (causal
+self, full self, compress cross, restore cross) from one implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.common import Params, dense_init, split_keys
+
+NEG_INF = -2.3819763e38  # large negative, safe in bf16/f32
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig,
+                   d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = split_keys(key, 4)
+    return {
+        "wq": dense_init(kq, (d, cfg.n_heads, hd), cfg.param_dtype, fan_in=d),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads, hd), cfg.param_dtype, fan_in=d),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads, hd), cfg.param_dtype, fan_in=d),
+        "wo": dense_init(ko, (cfg.n_heads, hd, d), cfg.param_dtype,
+                         fan_in=cfg.n_heads * hd),
+    }
+
+
+def qkv_proj(params: Params, xq: jax.Array, xkv: jax.Array,
+             dtype: jnp.dtype) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project queries from xq and keys/values from xkv (same for self-attn)."""
+    q = jnp.einsum("bld,dhk->blhk", xq, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(dtype))
+    return q, k, v
+
+
+def out_proj(params: Params, o: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    return jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def make_mask(q_pos: jax.Array, k_pos: jax.Array, mode: str,
+              window: "int | jax.Array" = 0) -> Optional[jax.Array]:
+    """Boolean (…, Lq, Lk) mask; True = attend.
+
+    mode: "causal" | "sliding" | "full".
+    q_pos/k_pos: integer positions, shapes broadcastable to (B, Lq)/(B, Lk)
+    or (Lq,)/(Lk,).  ``window`` may be a traced int32 scalar; for mode
+    "sliding", window == 0 degrades to plain causal (per-layer patterns).
+    """
+    if mode == "full":
+        return None
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    mask = kp <= qp
+    if mode == "sliding":
+        w = jnp.asarray(window, jnp.int32)
+        weff = jnp.where(w > 0, w, jnp.int32(2**30))
+        mask = jnp.logical_and(mask, kp > qp - weff)
+    elif mode != "causal":
+        raise ValueError(mode)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product attention (GQA aware)
+# ---------------------------------------------------------------------------
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+         mask: Optional[jax.Array] = None,
+         logit_softcap: float = 0.0,
+         kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B, Lq, H, D); k, v: (B, Lk, KV, D); mask: (B?, Lq, Lk) bool.
+
+    kv_valid: optional (B, Lk) bool marking valid cache slots (decode).
+    Returns (B, Lq, H, D).
+    """
+    B, Lq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = D ** -0.5
+    qg = q.reshape(B, Lq, KV, G, D)
+    logits = jnp.einsum("blkgd,bskd->bklgs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))          # (B, KV, Lq, G, Lk)
+    if logit_softcap > 0.0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+
+    cm = None                                            # (B, Lq, Lk) bool
+    if mask is not None:
+        cm = mask if mask.ndim == 3 else jnp.broadcast_to(
+            mask[None], (B,) + mask.shape)
+    if kv_valid is not None:
+        kvm = jnp.broadcast_to(kv_valid[:, None, :], (B, Lq, kv_valid.shape[-1]))
+        cm = kvm if cm is None else jnp.logical_and(cm, kvm)
+
+    if cm is None:
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        # masked-safe softmax: fully-masked query rows produce zero output
+        # (needed by the TConst context path when history is still empty).
+        mm = cm[:, None, :, None, :]
+        logits = jnp.where(mm, logits, NEG_INF)
+        mx = jnp.max(logits, axis=-1, keepdims=True)
+        e = jnp.exp(logits - jax.lax.stop_gradient(mx)) * mm
+        probs = e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+    o = jnp.einsum("bklgs,bskd->blkgd", probs, v.astype(jnp.float32))
+    return o.reshape(B, Lq, H, D).astype(q.dtype)
+
+
+def attention_block(params: Params, xq: jax.Array, xkv: jax.Array,
+                    mask: Optional[jax.Array],
+                    cos_q: Optional[jax.Array] = None,
+                    sin_q: Optional[jax.Array] = None,
+                    cos_k: Optional[jax.Array] = None,
+                    sin_k: Optional[jax.Array] = None,
+                    logit_softcap: float = 0.0) -> jax.Array:
+    """Full projected attention; RoPE applied when cos/sin given."""
+    from repro.layers.rope import apply_rope
+    dtype = xq.dtype
+    q, k, v = qkv_proj(params, xq, xkv, dtype)
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+    if cos_k is not None:
+        k = apply_rope(k, cos_k, sin_k)
+    o = sdpa(q, k, v, mask, logit_softcap)
+    return out_proj(params, o, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a static cache
+# ---------------------------------------------------------------------------
+
+
+def cross_attend_cached(params: Params, x: jax.Array, k_cache: jax.Array,
+                        v_cache: jax.Array, kv_valid: Optional[jax.Array],
+                        cos_q: Optional[jax.Array] = None,
+                        sin_q: Optional[jax.Array] = None,
+                        logit_softcap: float = 0.0) -> jax.Array:
+    """Cross-attention against pre-projected (cached) K/V.
+
+    x: (B, Lq, d); k_cache/v_cache: (B, S, KV, D) already RoPE'd at their
+    source positions; kv_valid: (B, S) bool.  Used by the TConst decode path
+    (queries attend to the static compressed-context KV).
+    """
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(dtype))
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+    o = sdpa(q, k_cache.astype(dtype), v_cache.astype(dtype),
+             mask=None, logit_softcap=logit_softcap, kv_valid=kv_valid)
+    return out_proj(params, o, dtype)
+
+
+def project_kv(params: Params, x: jax.Array,
+               cos: Optional[jax.Array] = None,
+               sin: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Project (and RoPE) K/V for caching. x: (B, S, d) -> (B, S, KV, D)."""
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cos is not None:
+        k = apply_rope(k, cos, sin)
+    return k, v
+
+
+def decode_attend(params: Params, x: jax.Array, k_cache: jax.Array,
+                  v_cache: jax.Array, cache_len: jax.Array,
+                  cos_q: Optional[jax.Array] = None,
+                  sin_q: Optional[jax.Array] = None,
+                  logit_softcap: float = 0.0,
+                  window: "int | jax.Array" = 0
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: x (B, 1, d); cache (B, S, KV, D); cache_len (B,).
+
+    Projects q/k/v for the new token, writes k/v into the cache at
+    ``cache_len``, attends over valid slots (optionally sliding-window
+    limited), returns (out (B,1,d), new_k_cache, new_v_cache).
+    """
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    B, _, _ = x.shape
+    S = k_cache.shape[1]
+    q, k_new, v_new = qkv_proj(params, x, x, dtype)
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+        k_new = apply_rope(k_new, cos_q, sin_q)
+    # scatter the new K/V into the cache at each sequence's write index.
+    # (A one-hot masked rewrite was measured to double decode-step HBM
+    # traffic/peak — it reads AND writes the whole cache; scatter touches
+    # one slot and updates in place under donation.)
+    bidx = jnp.arange(x.shape[0])
+    k_cache = k_cache.at[bidx, cache_len].set(
+        k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, cache_len].set(
+        v_new[:, 0].astype(v_cache.dtype))
+    slots = jnp.arange(S)[None]                                # (1, S)
+    valid = slots <= cache_len[:, None]
+    w = jnp.asarray(window, jnp.int32)
+    weff = jnp.where(w > 0, w, jnp.int32(2**30))
+    valid = jnp.logical_and(valid, slots > cache_len[:, None] - weff)
+    o = sdpa(q, k_cache.astype(dtype), v_cache.astype(dtype),
+             mask=None, logit_softcap=logit_softcap, kv_valid=valid)
+    return out_proj(params, o, dtype), k_cache, v_cache

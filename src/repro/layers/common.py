@@ -1,0 +1,96 @@
+"""Shared building blocks: parameter init helpers and normalisation layers.
+
+The framework uses a functional, explicit-parameter style: every layer is an
+``init_*(key, cfg, ...) -> params`` plus an ``apply(params, x, ...) -> y``
+pair, with params as plain nested dicts of ``jnp.ndarray``.  This keeps the
+whole model a transparent pytree for ``jax.jit`` sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Sequence[int], dtype: str = "float32",
+               fan_in: int | None = None) -> jax.Array:
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (LeCun normal)."""
+    if fan_in is None:
+        fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Sequence[int],
+               dtype: str = "float32") -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(shape: Sequence[int], dtype: str = "float32") -> jax.Array:
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones_init(shape: Sequence[int], dtype: str = "float32") -> jax.Array:
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (llama-family default everywhere; whisper uses LayerNorm)
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype: str = "float32") -> Params:
+    return {"scale": ones_init((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+def init_layernorm(d: int, dtype: str = "float32") -> Params:
+    return {"scale": ones_init((d,), dtype), "bias": zeros_init((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))

@@ -1,0 +1,55 @@
+"""Token embeddings, output head, and modality frontend stubs.
+
+Per the assignment carve-out, the audio/vision frontends are stubs: the
+model consumes precomputed frame/patch embeddings supplied via
+``input_specs()``.  ``frontend_proj`` is the (real, trained) projector that
+maps frontend embeddings into the backbone width.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.common import Params, dense_init, embed_init, split_keys
+
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, ko, kf = split_keys(key, 3)
+    params: Params = {
+        "tok": embed_init(ke, (cfg.vocab_size, cfg.d_model), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(
+            ko, (cfg.d_model, cfg.vocab_size), cfg.param_dtype,
+            fan_in=cfg.d_model)
+    if cfg.frontend != "none":
+        fdim = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = dense_init(
+            kf, (fdim, cfg.d_model), cfg.param_dtype, fan_in=fdim)
+    return params
+
+
+def embed_tokens(params: Params, tokens: jax.Array,
+                 dtype: jnp.dtype) -> jax.Array:
+    return params["tok"].astype(dtype)[tokens]
+
+
+def project_frontend(params: Params, feats: jax.Array) -> jax.Array:
+    """Map stub frontend embeddings (B, T, frontend_dim) into d_model."""
+    return jnp.einsum("btf,fd->btd", feats,
+                      params["frontend_proj"].astype(feats.dtype))
+
+
+def lm_head(params: Params, x: jax.Array,
+             logit_softcap: float = 0.0) -> jax.Array:
+    if "head" in params:
+        logits = jnp.einsum("bld,dv->blv", x, params["head"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bld,vd->blv", x, params["tok"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if logit_softcap > 0.0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    return logits

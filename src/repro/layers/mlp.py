@@ -1,0 +1,45 @@
+"""Feed-forward networks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import Params, dense_init, zeros_init, split_keys
+
+
+def init_swiglu(key: jax.Array, d_model: int, d_ff: int,
+                param_dtype: str = "float32") -> Params:
+    kg, ku, kd = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(kg, (d_model, d_ff), param_dtype, fan_in=d_model),
+        "w_up": dense_init(ku, (d_model, d_ff), param_dtype, fan_in=d_model),
+        "w_down": dense_init(kd, (d_ff, d_model), param_dtype, fan_in=d_ff),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    g = jnp.einsum("bld,df->blf", x, params["w_gate"].astype(dtype))
+    u = jnp.einsum("bld,df->blf", x, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return jnp.einsum("blf,fd->bld", h, params["w_down"].astype(dtype))
+
+
+def init_gelu_mlp(key: jax.Array, d_model: int, d_ff: int,
+                  param_dtype: str = "float32") -> Params:
+    k1, k2 = split_keys(key, 2)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), param_dtype, fan_in=d_model),
+        "b_in": zeros_init((d_ff,), param_dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), param_dtype, fan_in=d_ff),
+        "b_out": zeros_init((d_model,), param_dtype),
+    }
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    h = jnp.einsum("bld,df->blf", x, params["w_in"].astype(dtype))
+    h = h + params["b_in"].astype(dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    y = jnp.einsum("blf,fd->bld", h, params["w_out"].astype(dtype))
+    return y + params["b_out"].astype(dtype)

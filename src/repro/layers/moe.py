@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN with GShard-style top-k capacity routing.
+
+Covers both assigned MoE flavours:
+
+- mixtral-8x22b [arXiv:2401.04088]: 8 experts, top-2, no shared experts.
+- deepseek-moe-16b [arXiv:2401.06066]: fine-grained experts (small
+  ``moe_d_ff``), 64 routed top-6 PLUS 2 always-on shared experts whose
+  output is added unconditionally.
+
+Routing uses dispatch/combine one-hot tensors with a capacity factor so the
+per-expert compute is static-shaped (XLA/TPU requirement) and the expert
+dimension can be sharded over the ``model`` mesh axis (expert parallelism);
+XLA then lowers the dispatch einsums to all-to-all style collectives, which
+the roofline pass audits.  Tokens overflowing an expert's capacity are
+dropped for that expert (standard GShard behaviour); the auxiliary
+load-balance loss keeps the router near-uniform so drops stay rare.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.common import Params, dense_init, split_keys
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, e = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    kr, kg, ku, kd, ks = split_keys(key, 5)
+    params: Params = {
+        "router": dense_init(kr, (d, e), cfg.param_dtype, fan_in=d),
+        "w_gate": dense_init(kg, (e, d, ff), cfg.param_dtype, fan_in=d),
+        "w_up": dense_init(ku, (e, d, ff), cfg.param_dtype, fan_in=d),
+        "w_down": dense_init(kd, (e, ff, d), cfg.param_dtype, fan_in=ff),
+    }
+    if cfg.n_shared_experts > 0:
+        from repro.layers.mlp import init_swiglu
+        params["shared"] = init_swiglu(
+            ks, d, ff * cfg.n_shared_experts, cfg.param_dtype)
+    return params
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int) -> int:
+    cap = int(n_tokens * top_k * CAPACITY_FACTOR / n_experts)
+    return max(4, -(-cap // 4) * 4)  # round up to multiple of 4
+
+
+def route_topk(logits: jax.Array, top_k: int, capacity: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """GShard dispatch/combine from router logits.
+
+    logits: (T, E). Returns (dispatch (T, E, C) bool-ish float,
+    combine (T, E, C) float, aux_loss scalar).
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)             # (T, K)
+    # renormalise the top-k gates (mixtral / deepseek convention)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # expert one-hots per choice: (K, T, E)
+    onehot = jax.nn.one_hot(gate_idx.T, E, dtype=jnp.float32)
+    # position of each (choice, token) within its expert queue: running count
+    flat = onehot.reshape(top_k * T, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat                # (K*T, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(top_k, T)
+    keep = (pos < capacity).astype(jnp.float32)                    # (K, T)
+
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)      # (K, T, C)
+    # combine[t, e, c] = sum_k gate * onehot[k,t,e] * pos_oh[k,t,c] * keep
+    combine = jnp.einsum("kt,kte,ktc->tec",
+                         gate_vals.T * keep, onehot, pos_oh)
+    dispatch = (combine > 0).astype(logits.dtype)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(onehot[0], axis=0)                          # top-1 assign
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E
+    return dispatch, combine.astype(logits.dtype), aux
+
+
+GROUP_SIZE = 1024      # GShard routing group: bounds dispatch-tensor memory
+
+
+def moe_ffn(params: Params, x: jax.Array, cfg: ModelConfig,
+            capacity_factor: float | None = None,
+            group_size: int | None = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, d) -> (y, aux_loss).
+
+    Routing is GROUP-wise (GShard): tokens are split into groups of
+    ``group_size`` and routed with a per-group capacity, so the dispatch/
+    combine tensors are (G, Tg, E, C) with Tg*C bounded — O(T) total
+    memory instead of the O(T^2/E) of flat routing, and the group dim
+    shards over ``data`` while experts shard over ``model`` (the dispatch
+    einsums lower to the expert-parallel all-to-all pattern).
+
+    ``capacity_factor=None`` uses the production CAPACITY_FACTOR; tests can
+    pass ``n_experts/top_k`` for dropless-exact routing.  Capacity drops
+    are standard GShard training semantics; the single-token decode path
+    never drops, so train/serve outputs coincide exactly only in the
+    dropless limit.
+    """
+    dtype = x.dtype
+    B, L, d = x.shape
+    T = B * L
+    gs = group_size or min(T, GROUP_SIZE)
+    while T % gs != 0:
+        gs //= 2
+    G = T // gs
+    xt = x.reshape(G, gs, d)
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"].astype(dtype))
+    cf = CAPACITY_FACTOR if capacity_factor is None else capacity_factor
+    cap = max(4, -(-int(gs * cfg.n_experts_per_tok * cf
+                        / cfg.n_experts) // 4) * 4)
+
+    dispatch, combine, aux = jax.vmap(
+        lambda lg: route_topk(lg, cfg.n_experts_per_tok, cap))(logits)
+
+    # dispatch tokens to per-group expert buffers: (G, E, C, d)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)
+    g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye).reshape(B, L, d)
+
+    if "shared" in params:
+        from repro.layers.mlp import swiglu
+        y = y + swiglu(params["shared"], x)
+    return y.astype(dtype), jnp.mean(aux)
+
+
+def moe_ffn_dense_oracle(params: Params, x: jax.Array, cfg: ModelConfig
+                         ) -> jax.Array:
+    """Dropless reference: every expert computed for every token, combined
+    with renormalised top-k gates.  O(E) cost — tests only."""
+    dtype = x.dtype
+    B, L, d = x.shape
+    xt = x.reshape(B * L, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.n_experts_per_tok)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], gate_idx].set(gate_vals)
+    g = jnp.einsum("td,edf->tef", xt, params["w_gate"].astype(dtype))
+    u = jnp.einsum("td,edf->tef", xt, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    ye = jnp.einsum("tef,efd->ted", h, params["w_down"].astype(dtype))
+    y = jnp.einsum("te,ted->td", gates.astype(dtype), ye).reshape(B, L, d)
+    if "shared" in params:
+        from repro.layers.mlp import swiglu
+        y = y + swiglu(params["shared"], x.reshape(B, L, d))
+    return y

@@ -1,0 +1,64 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head dim into (temporal, height, width)
+sections, each rotated by its own position stream.  For the language-only
+backbone built here the three streams coincide for text tokens and diverge
+for (stubbed) vision tokens, so the implementation takes a ``(3, B, L)``
+position tensor; plain text passes the same positions three times.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions.
+
+    positions: (..., L) int32 -> cos/sin of shape (..., L, head_dim // 2).
+    """
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate x of shape (B, L, H, D) with cos/sin of shape (B, L, D//2)."""
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]            # broadcast over heads
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(orig_dtype)
+
+
+def mrope_cos_sin(positions3: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE cos/sin. positions3: (3, ..., L); sections sum to
+    head_dim//2.  Returns cos/sin of shape (..., L, head_dim//2)."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)                       # (D/2,)
+    ang = positions3.astype(jnp.float32)[..., None] * inv   # (3, ..., L, D/2)
+    # Select which of the 3 position streams drives each frequency band.
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=head_dim // 2)     # (D/2,)
+    a = jnp.moveaxis(ang, 0, -1)                            # (..., D/2, 3)
+    idx = sel.reshape((1,) * (a.ndim - 2) + (head_dim // 2, 1))
+    idx = jnp.broadcast_to(idx, a.shape[:-1] + (1,))
+    ang = jnp.take_along_axis(a, idx, axis=-1)[..., 0]      # (..., L, D/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def text_positions3(positions: jax.Array) -> jax.Array:
+    """Text-only M-RoPE positions: all three streams equal."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

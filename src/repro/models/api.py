@@ -1,0 +1,153 @@
+"""Unified model facade: one API per architecture, dispatching to the
+decoder-only LM, the encoder-decoder, or the TConstFormer core.
+
+Every entry point takes/returns plain pytrees so the launchers can jit
+them with explicit shardings.  ``input_specs`` produces the
+ShapeDtypeStruct stand-ins used by the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.core import tconst as TC
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+def _is_tconst(cfg: ModelConfig) -> bool:
+    return cfg.attention_mode in ("tconst", "tlin") and \
+        cfg.arch_type not in ("ssm", "audio")
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token CE.  logits (B, L, V) f32; targets (B, L) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        if _is_tconst(cfg):
+            return TC.init_tconst_lm(key, cfg)
+        if cfg.is_encdec:
+            return ED.init_encdec(key, cfg)
+        return LM.init_lm(key, cfg)
+
+    # -- training -----------------------------------------------------------
+    def forward(self, params, batch: Dict[str, Any]
+                ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if _is_tconst(cfg):
+            return TC.tconst_forward(params, tokens, cfg,
+                                     mode=cfg.attention_mode)
+        if cfg.is_encdec:
+            return ED.encdec_forward(params, tokens, batch["audio_feats"],
+                                     cfg)
+        return LM.lm_forward(
+            params, tokens, cfg,
+            vision_embeds=batch.get("vision_embeds"),
+            vision_mask=batch.get("vision_mask"))
+
+    def loss(self, params, batch: Dict[str, Any]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        total = ce + self.cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if _is_tconst(cfg):
+            return TC.init_tconst_cache(cfg, batch, max_len,
+                                        mode=cfg.attention_mode)
+        if cfg.is_encdec:
+            return ED.init_encdec_cache(cfg, batch, max_len)
+        return LM.init_kv_cache(cfg, batch, max_len)
+
+    def prefill(self, params, batch: Dict[str, Any], max_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if _is_tconst(cfg):
+            return TC.prefill(params, tokens, cfg, max_len,
+                              mode=cfg.attention_mode)
+        if cfg.is_encdec:
+            return ED.encdec_prefill(params, tokens, batch["audio_feats"],
+                                     cfg, max_len)
+        return LM.lm_prefill(
+            params, tokens, cfg, max_len,
+            vision_embeds=batch.get("vision_embeds"),
+            vision_mask=batch.get("vision_mask"))
+
+    def decode_step(self, params, cache, token: jax.Array):
+        cfg = self.cfg
+        if _is_tconst(cfg):
+            return TC.decode_step(params, cache, token, cfg,
+                                  mode=cfg.attention_mode)
+        if cfg.is_encdec:
+            return ED.encdec_decode_step(params, cache, token, cfg)
+        return LM.lm_decode_step(params, cache, token, cfg)
+
+    def resync(self, params, cache):
+        """TConst periodic global synchronisation (no-op otherwise)."""
+        cfg = self.cfg
+        if _is_tconst(cfg):
+            return TC.resync(params, cache, cfg, mode=cfg.attention_mode)
+        return cache
+
+    def needs_resync(self, cache) -> jax.Array:
+        if _is_tconst(self.cfg):
+            return cache["gen_len"] >= self.cfg.tconst.w_og
+        return jnp.zeros((), bool)
+
+    # -- dry-run specs -----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape
+        (assignment: weak-type-correct, shardable, no device allocation)."""
+        cfg = self.cfg
+        B, L = shape.global_batch, shape.seq_len
+        f = jax.ShapeDtypeStruct
+        specs: Dict[str, Any] = {"tokens": f((B, L), jnp.int32)}
+        if cfg.arch_type == "vlm":
+            Tv = cfg.frontend_tokens
+            specs["vision_embeds"] = f((B, Tv, cfg.frontend_dim),
+                                       jnp.dtype(cfg.dtype))
+            specs["vision_mask"] = f((B, L), jnp.bool_)
+        if cfg.is_encdec:
+            specs["audio_feats"] = f((B, cfg.encoder_seq, cfg.frontend_dim),
+                                     jnp.dtype(cfg.dtype))
+        return specs
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict[str, Any]:
+        """ShapeDtypeStructs of the serve cache (eval_shape: no alloc)."""
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len))
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    cfg.validate()
+    return ModelAPI(cfg)

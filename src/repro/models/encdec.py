@@ -1,0 +1,256 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs`` supplies post-conv frame embeddings of shape
+(B, encoder_seq, frontend_dim); a learned projector maps them to d_model.
+
+Deviations from the original (documented in DESIGN.md): decoder
+self-attention uses RoPE instead of learned absolute positions so that the
+assigned decode shapes (32k / 524k) are well-defined; norms are LayerNorm
+and FFNs GELU, as in the original.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import attention as A
+from repro.layers import embed as E
+from repro.layers import rope as R
+from repro.layers.common import (Params, embed_init, init_layernorm,
+                                 layernorm, split_keys)
+from repro.layers.mlp import gelu_mlp, init_gelu_mlp
+from repro.kernels.xla_flash import flash_attention
+
+FLASH_THRESHOLD = 2048
+
+
+def _init_enc_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ka, kf = split_keys(key, 2)
+    return {
+        "ln1": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "attn": A.init_attention(ka, cfg),
+        "ln2": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "ffn": init_gelu_mlp(kf, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _init_dec_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ka, kc, kf = split_keys(key, 3)
+    return {
+        "ln1": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "attn": A.init_attention(ka, cfg),
+        "lnc": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "cross": A.init_attention(kc, cfg),
+        "ln2": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "ffn": init_gelu_mlp(kf, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kp, kenc, kdec = split_keys(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": E.init_embed(ke, cfg),
+        "enc_pos": embed_init(kp, (cfg.encoder_seq, cfg.d_model),
+                              cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_layernorm(cfg.d_model, cfg.param_dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_layernorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Params, audio_feats: jax.Array, cfg: ModelConfig
+           ) -> jax.Array:
+    """audio_feats: (B, T_enc, frontend_dim) stub conv-frontend output."""
+    from repro.sharding.rules import shard_act
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    x = E.project_frontend(params["embed"], audio_feats.astype(dtype))
+    x = x + params["enc_pos"].astype(dtype)[None, :x.shape[1]]
+    x = shard_act(x)
+
+    def body(x, layer):
+        x = shard_act(x)
+        xn = layernorm(layer["ln1"], x, eps)
+        o = A.attention_block(layer["attn"], xn, xn, None)   # bidirectional
+        x = x + o
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layernorm(params["enc_norm"], x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (teacher-forced)
+# ---------------------------------------------------------------------------
+
+
+def _dec_self_attn(layer: Params, xn: jax.Array, pos: jax.Array,
+                   cfg: ModelConfig, cos, sin) -> jax.Array:
+    dtype = xn.dtype
+    q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+    q = R.apply_rope(q, cos, sin)
+    k = R.apply_rope(k, cos, sin)
+    L = xn.shape[1]
+    window = cfg.sliding_window if cfg.attention_mode == "sliding" else 0
+    if L >= FLASH_THRESHOLD:
+        o = flash_attention(q, k, v, pos, pos, window, True, 0.0, 512, 512)
+    else:
+        mode = "sliding" if window else "causal"
+        o = A.sdpa(q, k, v, A.make_mask(pos, pos, mode, window))
+    return A.out_proj(layer["attn"], o, dtype)
+
+
+def _cross_attn(layer: Params, xc: jax.Array, memory: jax.Array) -> jax.Array:
+    """Decoder->encoder cross-attention; blocked path for long decoders
+    (naive logits are (B, H, L_dec, T_enc) — 63 GiB at train_4k x B=256)."""
+    L = xc.shape[1]
+    if L < FLASH_THRESHOLD:
+        return A.attention_block(layer["cross"], xc, memory, None)
+    dtype = xc.dtype
+    q, k, v = A.qkv_proj(layer["cross"], xc, memory, dtype)
+    qp = jnp.arange(L, dtype=jnp.int32)
+    kp = jnp.arange(memory.shape[1], dtype=jnp.int32)
+    o = flash_attention(q, k, v, qp, kp, 0, False, 0.0, 512, 512)
+    return A.out_proj(layer["cross"], o, dtype)
+
+
+def decode_train(params: Params, tokens: jax.Array, memory: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder. tokens (B, L), memory (B, T_enc, D)."""
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B, L = tokens.shape
+    x = E.embed_tokens(params["embed"], tokens, dtype)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(x, layer):
+        from repro.sharding.rules import shard_act
+        x = shard_act(x)
+        xn = layernorm(layer["ln1"], x, eps)
+        x = x + _dec_self_attn(layer, xn, pos, cfg, cos, sin)
+        xc = layernorm(layer["lnc"], x, eps)
+        x = x + _cross_attn(layer, xc, memory)
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layernorm(params["dec_norm"], x, eps)
+    return E.lm_head(params["embed"], x)
+
+
+def encdec_forward(params: Params, tokens: jax.Array, audio_feats: jax.Array,
+                   cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    memory = encode(params, audio_feats, cfg)
+    logits = decode_train(params, tokens, memory, cfg)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Dict[str, Any]:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    n = cfg.n_layers
+    return {
+        "len": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((n, batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((n, batch, max_len, kv, hd), dt),
+        "cross_k": jnp.zeros((n, batch, cfg.encoder_seq, kv, hd), dt),
+        "cross_v": jnp.zeros((n, batch, cfg.encoder_seq, kv, hd), dt),
+    }
+
+
+def encdec_prefill(params: Params, tokens: jax.Array, audio_feats: jax.Array,
+                   cfg: ModelConfig, max_len: int
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Encode audio, pre-project per-layer cross K/V, teacher-force the
+    prompt through the decoder, fill self-attention caches."""
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B, L = tokens.shape
+    memory = encode(params, audio_feats, cfg)
+    cache = init_encdec_cache(cfg, B, max_len)
+    x = E.embed_tokens(params["embed"], tokens, dtype)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(x, layer):
+        xn = layernorm(layer["ln1"], x, eps)
+        q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k = R.apply_rope(k, cos, sin)
+        o = A.sdpa(q, k, v, A.make_mask(pos, pos, "causal")) \
+            if L < FLASH_THRESHOLD else flash_attention(
+                q, k, v, pos, pos, 0, True, 0.0, 512, 512)
+        x = x + A.out_proj(layer["attn"], o, dtype)
+        kf = jnp.zeros((B, max_len) + k.shape[2:], dtype)
+        vf = jnp.zeros((B, max_len) + v.shape[2:], dtype)
+        kf = jax.lax.dynamic_update_slice_in_dim(kf, k, 0, 1)
+        vf = jax.lax.dynamic_update_slice_in_dim(vf, v, 0, 1)
+        ck, cv = A.project_kv(layer["cross"], memory)
+        xc = layernorm(layer["lnc"], x, eps)
+        x = x + A.attention_block(layer["cross"], xc, memory, None)
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, {"k": kf, "v": vf, "cross_k": ck, "cross_v": cv}
+
+    x, extras = jax.lax.scan(body, x, params["dec_layers"])
+    for key, val in extras.items():
+        cache[key] = val
+    x = layernorm(params["dec_norm"], x, eps)
+    logits = E.lm_head(params["embed"], x[:, -1:])[:, 0]
+    cache["len"] = jnp.full((B,), L, jnp.int32)
+    return logits, cache
+
+
+def encdec_decode_step(params: Params, cache: Dict[str, Any],
+                       token: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B = token.shape[0]
+    x = E.embed_tokens(params["embed"], token[:, None], dtype)
+    pos = cache["len"][:, None]
+    cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    window = cfg.sliding_window if cfg.attention_mode == "sliding" else 0
+
+    def body(x, xs):
+        layer, slc = xs
+        xn = layernorm(layer["ln1"], x, eps)
+        out, k, v = A.decode_attend(layer["attn"], xn, slc["k"], slc["v"],
+                                    cache["len"], cos, sin, 0.0, window)
+        x = x + out
+        xc = layernorm(layer["lnc"], x, eps)
+        x = x + A.cross_attend_cached(layer["cross"], xc, slc["cross_k"],
+                                      slc["cross_v"], None)
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, {"k": k, "v": v}
+
+    slices = {"k": cache["k"], "v": cache["v"],
+              "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    x, new = jax.lax.scan(body, x, (params["dec_layers"], slices))
+    cache = dict(cache)
+    cache["k"], cache["v"] = new["k"], new["v"]
+    x = layernorm(params["dec_norm"], x, eps)
+    logits = E.lm_head(params["embed"], x)[:, 0]
+    cache["len"] = cache["len"] + 1
+    return logits, cache

@@ -1,0 +1,417 @@
+"""Decoder-only language model covering the dense / moe / ssm / hybrid /
+vlm assigned architectures.
+
+Design notes
+------------
+* **Scan over layers.**  Homogeneous layers are parameter-stacked (leading
+  ``n_scan`` dim) and driven by ``jax.lax.scan`` so the 126-layer llama3
+  lowers to a compact HLO.  Per-layer heterogeneity (gemma3's 5 local : 1
+  global pattern, hymba's window pattern) is expressed as a *traced* int32
+  ``window`` array riding the scan — masks are position arithmetic, so no
+  unrolling is needed.  DeepSeek's leading dense layers differ in
+  parameter *shape* and are unrolled separately (``dense_layers``).
+* **Attention dispatch.**  Sequences longer than ``FLASH_THRESHOLD`` route
+  through the blocked flash implementation (O(L·block) memory); short ones
+  use the naive reference.  Both are numerically interchangeable (tested).
+* **Remat.**  The scanned layer body is wrapped in ``jax.checkpoint`` for
+  training so the dry-run memory analysis reflects a production
+  activation-recompute policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.layers import attention as A
+from repro.layers import embed as E
+from repro.layers import rope as R
+from repro.layers import ssm as S
+from repro.layers.common import (Params, init_rmsnorm, rmsnorm, split_keys)
+from repro.layers.mlp import init_swiglu, swiglu
+from repro.layers.moe import init_moe, moe_ffn
+from repro.kernels.xla_flash import flash_attention
+
+FLASH_THRESHOLD = 2048      # min L_q*L_k elements^(1/2) to use blocked path
+
+
+# ---------------------------------------------------------------------------
+# Layer windows (per-layer sliding window; 0 = full causal)
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    n = cfg.n_layers
+    if cfg.local_global_ratio > 0:
+        # gemma3: `ratio` local layers then 1 global, repeating
+        period = cfg.local_global_ratio + 1
+        w = np.array([0 if (i % period) == cfg.local_global_ratio
+                      else cfg.sliding_window for i in range(n)], np.int32)
+        return w
+    if cfg.attention_mode == "sliding" and cfg.sliding_window > 0:
+        return np.full((n,), cfg.sliding_window, np.int32)
+    return np.zeros((n,), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, moe: bool) -> Params:
+    ka, kf, ks = split_keys(key, 3)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if cfg.arch_type == "ssm":
+        p["ssm"] = S.init_ssm(ka, cfg)
+        return p
+    p["attn"] = A.init_attention(ka, cfg)
+    if cfg.hybrid_parallel:
+        p["ssm"] = S.init_ssm(ks, cfg)
+    p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if moe:
+        p["ffn"] = init_moe(kf, cfg)
+    else:
+        p["ffn"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kd, kl = split_keys(key, 3)
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.n_layers - n_dense
+    params: Params = {"embed": E.init_embed(ke, cfg)}
+    if n_dense:
+        dkeys = split_keys(kd, n_dense)
+        params["dense_layers"] = [
+            _init_layer(k, cfg, moe=False) for k in dkeys]
+    lkeys = jax.random.split(kl, n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, moe=cfg.is_moe))(lkeys)
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Shared layer body
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(layer: Params, xn: jax.Array, pos: jax.Array,
+                    window: jax.Array, cfg: ModelConfig,
+                    cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """pos: (L,) SHARED positions (1-D keeps flash masks head/batch-free)."""
+    dtype = xn.dtype
+    q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+    q = R.apply_rope(q, cos, sin)
+    k = R.apply_rope(k, cos, sin)
+    L = xn.shape[1]
+    if L >= FLASH_THRESHOLD:
+        o = flash_attention(q, k, v, pos, pos, window, True,
+                            cfg.logit_softcap, 512, 512)
+    else:
+        mask = A.make_mask(pos, pos, "sliding", window)
+        o = A.sdpa(q, k, v, mask, cfg.logit_softcap)
+    return A.out_proj(layer["attn"], o, dtype)
+
+
+def _ffn(layer: Params, xn: jax.Array, cfg: ModelConfig, moe: bool
+         ) -> Tuple[jax.Array, jax.Array]:
+    if moe:
+        return moe_ffn(layer["ffn"], xn, cfg)
+    return swiglu(layer["ffn"], xn), jnp.zeros((), jnp.float32)
+
+
+def _layer_fwd(layer: Params, x: jax.Array, pos: jax.Array,
+               window: jax.Array, cfg: ModelConfig, moe: bool,
+               cos: jax.Array, sin: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence layer forward. Returns (x, aux)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    xn = rmsnorm(layer["ln1"], x, eps)
+    if cfg.arch_type == "ssm":
+        out, _ = S.ssm_mixer(layer["ssm"], xn, cfg)
+        return x + out, aux
+    out = _self_attention(layer, xn, pos, window, cfg, cos, sin)
+    if cfg.hybrid_parallel:
+        ssm_out, _ = S.ssm_mixer(layer["ssm"], xn, cfg)
+        out = (out + ssm_out) * 0.5          # hymba: mean-fuse parallel heads
+    x = x + out
+    f, aux = _ffn(layer, rmsnorm(layer["ln2"], x, eps), cfg, moe)
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 vision_embeds: Optional[jax.Array] = None,
+                 vision_mask: Optional[jax.Array] = None) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = E.embed_tokens(params["embed"], tokens, dtype)
+    if vision_embeds is not None:
+        pv = E.project_frontend(params["embed"], vision_embeds.astype(dtype))
+        Tv = pv.shape[1]
+        idx = jnp.clip(jnp.cumsum(vision_mask, axis=1) - 1, 0, Tv - 1)
+        gathered = jnp.take_along_axis(pv, idx[..., None], axis=1)
+        x = jnp.where(vision_mask[..., None], gathered, x)
+    return x
+
+
+def _rope_tables(cfg: ModelConfig, pos: jax.Array,
+                 positions3: Optional[jax.Array]):
+    hd = cfg.resolved_head_dim
+    if cfg.mrope and cfg.mrope_sections:
+        p3 = positions3 if positions3 is not None else R.text_positions3(pos)
+        return R.mrope_cos_sin(p3, hd, cfg.rope_theta, cfg.mrope_sections)
+    return R.rope_cos_sin(pos, hd, cfg.rope_theta)
+
+
+def lm_forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+               positions3: Optional[jax.Array] = None,
+               vision_embeds: Optional[jax.Array] = None,
+               vision_mask: Optional[jax.Array] = None,
+               remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward.  tokens: (B, L) -> (logits (B, L, V), aux)."""
+    from repro.sharding.rules import shard_act
+    B, L = tokens.shape
+    x = embed_inputs(params, tokens, cfg, vision_embeds, vision_mask)
+    x = shard_act(x)
+    pos = jnp.arange(L, dtype=jnp.int32)          # shared 1-D positions
+    cos, sin = _rope_tables(cfg, pos, positions3)
+    windows = jnp.asarray(layer_windows(cfg))
+    aux = jnp.zeros((), jnp.float32)
+
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    for i, layer in enumerate(params.get("dense_layers", [])):
+        x, a = _layer_fwd(layer, x, pos, windows[i], cfg, False, cos, sin)
+        aux = aux + a
+
+    def body(carry, xs):
+        x, aux = carry
+        layer, window = xs
+        x = shard_act(x)
+        x, a = _layer_fwd(layer, x, pos, window, cfg, cfg.is_moe, cos, sin)
+        x = shard_act(x)
+        return (x, aux + a), None
+
+    n_scan = cfg.n_layers - n_dense
+    scan_xs = (params["layers"], windows[n_dense:])
+    group = _remat_group(n_scan) if remat else 1
+    if remat and group > 1:
+        # Nested (sqrt-depth) remat: only n_scan/group boundary activations
+        # are saved for the backward pass; each group's inner carries are
+        # recomputed from its boundary.  Cuts the 126-layer llama3 saved-
+        # activation footprint by ~9x (EXPERIMENTS.md §Perf iteration 2).
+        ng = n_scan // group
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((ng, group) + a.shape[1:]), scan_xs)
+
+        @jax.checkpoint
+        def group_body(carry, xs):
+            # barrier: stop XLA from hoisting f32 converts across the
+            # saved boundary stack (measured: it duplicated every saved
+            # carry in f32 — §Perf H1 it4)
+            carry = jax.lax.optimization_barrier(carry)
+            return jax.lax.scan(body, carry, xs)
+
+        (x, aux), _ = jax.lax.scan(group_body, (x, aux), grouped)
+    else:
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), scan_xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x, cfg.logit_softcap)
+    return logits, aux
+
+
+def _remat_group(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (1 if n is small)."""
+    if n < 16:
+        return 1
+    target = n ** 0.5
+    divs = [d for d in range(2, n) if n % d == 0]
+    return min(divs, key=lambda d: abs(d - target)) if divs else 1
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int
+                  ) -> Dict[str, Any]:
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.n_layers - n_dense
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.arch_type != "ssm":
+        cache["k"] = jnp.zeros((n_scan, batch, max_len, kv, hd), dt)
+        cache["v"] = jnp.zeros((n_scan, batch, max_len, kv, hd), dt)
+        if n_dense:
+            cache["dense_k"] = jnp.zeros((n_dense, batch, max_len, kv, hd), dt)
+            cache["dense_v"] = jnp.zeros((n_dense, batch, max_len, kv, hd), dt)
+    if cfg.arch_type == "ssm" or cfg.hybrid_parallel:
+        dims = S.ssm_dims(cfg)
+        cache["ssm"] = jnp.zeros(
+            (n_scan, batch, dims.n_heads, dims.head_dim, dims.n_state),
+            jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (n_scan, batch, dims.d_conv - 1, dims.conv_dim), dt)
+    return cache
+
+
+def _layer_decode(layer: Params, x: jax.Array, cache_slice: Dict[str, Any],
+                  cache_len: jax.Array, window: jax.Array, cfg: ModelConfig,
+                  moe: bool, cos: jax.Array, sin: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    eps = cfg.norm_eps
+    new_slice: Dict[str, Any] = {}
+    xn = rmsnorm(layer["ln1"], x, eps)
+    if cfg.arch_type == "ssm":
+        st = {"ssm": cache_slice["ssm"], "conv": cache_slice["conv"]}
+        out, st = S.ssm_mixer(layer["ssm"], xn, cfg, state=st)
+        new_slice.update(st)
+        return x + out, new_slice
+    out, k, v = A.decode_attend(
+        layer["attn"], xn, cache_slice["k"], cache_slice["v"], cache_len,
+        cos, sin, cfg.logit_softcap, window)
+    new_slice["k"], new_slice["v"] = k, v
+    if cfg.hybrid_parallel:
+        st = {"ssm": cache_slice["ssm"], "conv": cache_slice["conv"]}
+        ssm_out, st = S.ssm_mixer(layer["ssm"], xn, cfg, state=st)
+        new_slice.update(st)
+        out = (out + ssm_out) * 0.5
+    x = x + out
+    f, _ = _ffn(layer, rmsnorm(layer["ln2"], x, eps), cfg, moe)
+    return x + f, new_slice
+
+
+def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
+                   cfg: ModelConfig,
+                   positions3: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode.  token: (B,) -> (logits (B, V), cache)."""
+    B = token.shape[0]
+    dtype = jnp.dtype(cfg.dtype)
+    x = E.embed_tokens(params["embed"], token[:, None], dtype)
+    pos = cache["len"][:, None]
+    cos, sin = _rope_tables(cfg, pos, positions3)
+    windows = jnp.asarray(layer_windows(cfg))
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+
+    cache = dict(cache)
+    for i, layer in enumerate(params.get("dense_layers", [])):
+        sl = {"k": cache["dense_k"][i], "v": cache["dense_v"][i]}
+        x, new = _layer_decode(layer, x, sl, cache["len"], windows[i], cfg,
+                               False, cos, sin)
+        cache["dense_k"] = cache["dense_k"].at[i].set(new["k"])
+        cache["dense_v"] = cache["dense_v"].at[i].set(new["v"])
+
+    # fori_loop with the stacked cache as CARRY, updated in place — a
+    # lax.scan with cache slices as ys would stack a SECOND full cache as
+    # its output (measured: ~2x decode peak on llama3-405b decode_32k,
+    # EXPERIMENTS.md §Beyond-paper).
+    keys = []
+    if cfg.arch_type != "ssm":
+        keys += ["k", "v"]
+    if cfg.arch_type == "ssm" or cfg.hybrid_parallel:
+        keys += ["ssm", "conv"]
+    scan_windows = jnp.asarray(windows[n_dense:])
+
+    def body(i, carry):
+        x, bufs = carry
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        slc = {k: bufs[k][i] for k in keys}
+        x, new = _layer_decode(layer, x, slc, cache["len"],
+                               scan_windows[i], cfg, cfg.is_moe, cos, sin)
+        bufs = {k: bufs[k].at[i].set(new[k]) for k in keys}
+        return (x, bufs)
+
+    n_scan = cfg.n_layers - n_dense
+    x, bufs = jax.lax.fori_loop(
+        0, n_scan, body, (x, {k: cache[k] for k in keys}))
+    for k in keys:
+        cache[k] = bufs[k]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x, cfg.logit_softcap)[:, 0]
+    cache["len"] = cache["len"] + 1
+    return logits, cache
+
+
+def lm_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+               max_len: int,
+               positions3: Optional[jax.Array] = None,
+               vision_embeds: Optional[jax.Array] = None,
+               vision_mask: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process a prompt, filling the KV cache.  Returns (last logits, cache).
+
+    Implemented as the full forward plus K/V capture (single pass; the
+    capture rides the layer scan).
+    """
+    from repro.sharding.rules import shard_act
+    B, L = tokens.shape
+    x = embed_inputs(params, tokens, cfg, vision_embeds, vision_mask)
+    x = shard_act(x)
+    pos = jnp.arange(L, dtype=jnp.int32)          # shared 1-D positions
+    cos, sin = _rope_tables(cfg, pos, positions3)
+    windows = jnp.asarray(layer_windows(cfg))
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    cache = init_kv_cache(cfg, B, max_len)
+    eps = cfg.norm_eps
+    dtype = jnp.dtype(cfg.dtype)
+
+    def capture_layer(layer, x, window, moe):
+        """Layer fwd that also returns this layer's K/V (and ssm state)."""
+        out_extras: Dict[str, Any] = {}
+        xn = rmsnorm(layer["ln1"], x, eps)
+        if cfg.arch_type == "ssm" or cfg.hybrid_parallel:
+            st0 = {"ssm": jnp.zeros_like(cache["ssm"][0]),
+                   "conv": jnp.zeros_like(cache["conv"][0])}
+            ssm_out, st = S.ssm_mixer(layer["ssm"], xn, cfg, state=st0)
+            out_extras["ssm"], out_extras["conv"] = st["ssm"], st["conv"]
+        if cfg.arch_type == "ssm":
+            return x + ssm_out, out_extras
+        q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k = R.apply_rope(k, cos, sin)
+        kf = jnp.zeros((B, max_len) + k.shape[2:], dtype)
+        vf = jnp.zeros((B, max_len) + v.shape[2:], dtype)
+        out_extras["k"] = jax.lax.dynamic_update_slice_in_dim(kf, k, 0, 1)
+        out_extras["v"] = jax.lax.dynamic_update_slice_in_dim(vf, v, 0, 1)
+        if L >= FLASH_THRESHOLD:
+            o = flash_attention(q, k, v, pos, pos, window, True,
+                                cfg.logit_softcap, 512, 512)
+        else:
+            o = A.sdpa(q, k, v, A.make_mask(pos, pos, "sliding", window),
+                       cfg.logit_softcap)
+        out = A.out_proj(layer["attn"], o, dtype)
+        if cfg.hybrid_parallel:
+            out = (out + ssm_out) * 0.5
+        x = x + out
+        f, _ = _ffn(layer, rmsnorm(layer["ln2"], x, eps), cfg, moe)
+        return x + f, out_extras
+
+    for i, layer in enumerate(params.get("dense_layers", [])):
+        x, ex = capture_layer(layer, x, windows[i], False)
+        cache["dense_k"] = cache["dense_k"].at[i].set(ex["k"])
+        cache["dense_v"] = cache["dense_v"].at[i].set(ex["v"])
+
+    def body(x, xs):
+        layer, window = xs
+        return capture_layer(layer, shard_act(x), window, cfg.is_moe)
+
+    x, extras = jax.lax.scan(body, x, (params["layers"], windows[n_dense:]))
+    for key, val in extras.items():
+        cache[key] = val
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x[:, -1:], cfg.logit_softcap)[:, 0]
+    cache["len"] = jnp.full((B,), L, jnp.int32)
+    return logits, cache

@@ -1,0 +1,13 @@
+"""Global runtime flags (kernel routing, interpret mode)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Flags:
+    use_pallas: bool = False          # route hot attention paths via Pallas
+    pallas_interpret: bool = True     # CPU container: interpret=True
+
+
+flags = Flags()

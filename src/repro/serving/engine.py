@@ -1,0 +1,91 @@
+"""Batched autoregressive serving engine.
+
+Drives prefill -> decode steps for any ModelAPI; for TConst-mode models it
+interposes the paper's periodic global synchronisation (`resync`) every
+``W_og`` generated tokens — the amortized-O(1) schedule of §4:
+``W_og - 1`` constant-time cache-hit steps, then ONE linear-time cache
+miss.  The engine jit-compiles the three stages separately so the
+benchmark harness can time hits and misses independently (paper Fig 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class StepStats:
+    kind: str              # "prefill" | "hit" | "miss"
+    seconds: float
+
+
+class Engine:
+    def __init__(self, api: ModelAPI, params: Any, max_len: int,
+                 sample_temperature: float = 0.0, seed: int = 0):
+        self.api = api
+        self.params = params
+        self.max_len = max_len
+        self.temperature = sample_temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, b, max_len))
+        self._decode = jax.jit(api.decode_step)
+        self._resync = jax.jit(api.resync)
+        self.stats: List[StepStats] = []
+
+    def _select(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, Any], n_tokens: int,
+                 record_stats: bool = False) -> np.ndarray:
+        """batch: prompt inputs (same-length prompts).  Returns
+        (B, n_tokens) generated ids."""
+        t0 = time.perf_counter()
+        logits, cache = jax.block_until_ready(
+            self._prefill(self.params, batch))
+        if record_stats:
+            self.stats.append(StepStats("prefill", time.perf_counter() - t0))
+        out = []
+        token = self._select(logits)
+        out.append(token)
+        for _ in range(n_tokens - 1):
+            kind = "hit"
+            if bool(np.asarray(self.api.needs_resync(cache)).all()):
+                t0 = time.perf_counter()
+                cache = jax.block_until_ready(
+                    self._resync(self.params, cache))
+                if record_stats:
+                    self.stats.append(
+                        StepStats("miss", time.perf_counter() - t0))
+            t0 = time.perf_counter()
+            logits, cache = jax.block_until_ready(
+                self._decode(self.params, cache, token))
+            if record_stats:
+                self.stats.append(StepStats(kind, time.perf_counter() - t0))
+            token = self._select(logits)
+            out.append(token)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # ------------------------------------------------------------------
+    def cache_bytes(self, batch_size: int) -> int:
+        """KV-cache footprint of this model at max_len (paper Fig 8g)."""
+        cache = jax.eval_shape(
+            lambda: self.api.init_cache(batch_size, self.max_len))
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            name = str(path[-1])
+            if "tokens" in name or "len" in name or "valid" in name:
+                continue   # id buffer / bookkeeping, not KV cache
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return total

@@ -1,0 +1,298 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Policy (DESIGN.md §5)
+---------------------
+* batch dims shard over the composed data axes — ``("pod", "data")`` on the
+  multi-pod mesh, ``("data",)`` on a single pod.
+* weight matrices shard their "wide" dim over ``model``, chosen as the
+  FIRST divisible dim from a per-tensor preference list (heads before
+  hidden, experts before ffn).  Anything not divisible is replicated —
+  correct (XLA SPMD inserts the collectives) and auditable in §Roofline.
+* optionally ``fsdp=True`` additionally shards the largest remaining dim
+  over the data axes (ZeRO-3 style) — used by the memory-tight configs.
+* decode caches shard batch over data when divisible, otherwise the
+  sequence-slot dim (long_500k has B=1); KV-heads then head_dim over
+  ``model``.
+
+Rules are keyed on (leaf name, rank): every parameter tensor in this
+framework has a unique trailing name; stacked (scanned) variants carry
+extra leading layer dims, detected as rank - base_rank.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+# (base_rank, preference list of (dim, purpose)) per trailing param name.
+# dims are indices into the UNSTACKED shape; negative ok.
+_PARAM_RULES: Dict[str, Tuple[int, Sequence[int]]] = {
+    "tok": (2, [0]),                 # (V, D): shard vocab
+    "head": (2, [1]),                # (D, V): shard vocab
+    "frontend_proj": (2, [1]),
+    "wq": (3, [1, 0]),               # (D, H, hd): heads, else D
+    "wk": (3, [1, 2, 0]),            # (D, KV, hd): kv, hd, D
+    "wv": (3, [1, 2, 0]),
+    "wo": (3, [0, 1]),               # (H, hd, D): heads, hd
+    "w_gate": (2, [1, 0]),           # dense (D, F)
+    "w_up": (2, [1, 0]),
+    "w_down": (2, [0, 1]),           # dense (F, D)
+    "w_in": (2, [1, 0]),
+    "w_out": (2, [0, 1]),
+    "in_proj": (2, [1, 0]),          # ssm (D, P)
+    "out_proj": (2, [0, 1]),
+    "conv_w": (2, [1]),              # (K, C)
+}
+_MOE_RULES: Dict[str, Tuple[int, Sequence[int]]] = {
+    "w_gate": (3, [0, 2]),           # (E, D, F): experts, else ffn
+    "w_up": (3, [0, 2]),
+    "w_down": (3, [0, 1]),           # (E, F, D)
+}
+_REPLICATED = {"scale", "bias", "b_in", "b_out", "router", "dt_bias",
+               "a_log", "d_skip", "norm_scale", "conv_b", "enc_pos"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _in_moe(path) -> bool:
+    names = [str(getattr(p, "key", "")) for p in path]
+    return "ffn" in names and "shared" not in names
+
+
+def _spec_for_param(path, leaf, mesh: Mesh, fsdp: bool) -> P:
+    name = _leaf_name(path)
+    rank = leaf.ndim
+    model_size = mesh.shape["model"]
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+
+    if name in _REPLICATED:
+        return P()
+    rules = _PARAM_RULES.get(name)
+    if name in _MOE_RULES and _in_moe(path):
+        base_rank, prefs = _MOE_RULES[name]
+        if rank >= base_rank:
+            rules = (base_rank, prefs)
+    if rules is None:
+        return P()
+    base_rank, prefs = rules
+    offset = rank - base_rank            # leading stacked layer dims
+    if offset < 0:
+        return P()
+    spec = [None] * rank
+    model_dim = None
+    for d in prefs:
+        dim = d + offset
+        if leaf.shape[dim] % model_size == 0 and leaf.shape[dim] >= model_size:
+            spec[dim] = "model"
+            model_dim = dim
+            break
+    if fsdp and dsize > 1:
+        # ZeRO-3: shard the largest remaining dim over the data axes
+        cands = [i for i in range(offset, rank)
+                 if i != model_dim and leaf.shape[i] % dsize == 0
+                 and leaf.shape[i] >= dsize]
+        if cands:
+            biggest = max(cands, key=lambda i: leaf.shape[i])
+            spec[biggest] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def param_shardings(shapes: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """shapes: pytree of ShapeDtypeStructs (or arrays).  Returns a matching
+    pytree of NamedSharding."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = [NamedSharding(mesh, _spec_for_param(p, l, mesh, fsdp))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Batch (activation inputs)
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(specs: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    out = {}
+    for k, v in specs.items():
+        B = v.shape[0]
+        if B % dsize == 0 and B >= dsize:
+            out[k] = NamedSharding(mesh, P(dspec, *([None] * (v.ndim - 1))))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serve caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec(path, leaf, mesh: Mesh, batch: int) -> P:
+    name = _leaf_name(path)
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    msize = mesh.shape["model"]
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    shape = leaf.shape
+    rank = leaf.ndim
+    spec: list = [None] * rank
+    b_ok = batch % dsize == 0 and batch >= dsize
+
+    # locate the batch dim: the first dim equal to `batch`
+    b_dim = next((i for i, s in enumerate(shape) if s == batch), None)
+
+    if name in ("len", "hist_len", "gen_len"):
+        return P()
+    if name == "tokens":
+        if b_ok:
+            spec[0] = dspec
+        elif shape[1] % dsize == 0:
+            spec[1] = dspec               # shard the id buffer over seq
+        return P(*spec)
+    if name in ("ctx_valid",):
+        if b_ok and b_dim is not None:
+            spec[b_dim] = dspec
+        return P(*spec)
+    if name in ("k", "v", "dense_k", "dense_v", "cross_k", "cross_v",
+                "ctx_k", "ctx_v", "gen_k", "gen_v", "hist_k", "hist_v"):
+        # layout (..., B, S, KV, hd)
+        s_dim, kv_dim, hd_dim = rank - 3, rank - 2, rank - 1
+        b_dim = rank - 4
+        if b_ok:
+            spec[b_dim] = dspec
+        elif shape[s_dim] % dsize == 0 and shape[s_dim] >= dsize:
+            spec[s_dim] = dspec           # long_500k: shard cache over seq
+        if shape[kv_dim] % msize == 0 and shape[kv_dim] >= msize:
+            spec[kv_dim] = "model"
+        elif shape[hd_dim] % msize == 0 and shape[hd_dim] >= msize:
+            spec[hd_dim] = "model"
+        return P(*spec)
+    if name == "ssm":
+        # (L, B, H, P, N)
+        if b_ok:
+            spec[1] = dspec
+        if shape[2] % msize == 0 and shape[2] >= msize:
+            spec[2] = "model"
+        elif shape[3] % msize == 0 and shape[3] >= msize:
+            spec[3] = "model"
+        return P(*spec)
+    if name == "conv":
+        # (L, B, K-1, C)
+        if b_ok:
+            spec[1] = dspec
+        if shape[3] % msize == 0 and shape[3] >= msize:
+            spec[3] = "model"
+        return P(*spec)
+    return P()
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [NamedSharding(mesh, _cache_spec(p, l, mesh, batch))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def generic_sharding(leaf, mesh: Mesh, fsdp: bool = False) -> NamedSharding:
+    """Shard the largest model-divisible dim over `model` (+ next largest
+    over data when fsdp) — used for tensors without a named rule, e.g.
+    factored optimizer statistics."""
+    spec: list = [None] * leaf.ndim
+    msize = mesh.shape["model"]
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+    for d in dims:
+        if spec[d] is None and leaf.shape[d] % msize == 0 \
+                and leaf.shape[d] >= msize:
+            spec[d] = "model"
+            break
+    if fsdp and dsize > 1:
+        for d in dims:
+            if spec[d] is None and leaf.shape[d] % dsize == 0 \
+                    and leaf.shape[d] >= dsize:
+                spec[d] = daxes if len(daxes) > 1 else daxes[0]
+                break
+    return NamedSharding(mesh, P(*spec))
+
+
+def opt_shardings(param_sh: Any, opt_shapes: Any, mesh: Mesh,
+                  fsdp: bool = False) -> Any:
+    """Optimizer m inherits the parameter shardings; v matches when
+    unfactored, else row/col statistics get generic shardings; step is
+    replicated."""
+    from repro.training.optim import OptState
+    v_sh = jax.tree_util.tree_map(
+        lambda l: generic_sharding(l, mesh, fsdp), opt_shapes.v)
+    return OptState(step=NamedSharding(mesh, P()),
+                    m=param_sh, v=v_sh)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context (MaxText-style logical constraints)
+#
+# GSPMD's propagation drops the batch sharding of the residual stream when
+# the FSDP-sharded embedding gather creates a data-axis conflict (measured:
+# a 16x activation blowup on llama3-405b — EXPERIMENTS.md §Perf).  The
+# launchers opt in to explicit constraints; tests/examples (1 device) leave
+# this unset and every call is a no-op.
+# ---------------------------------------------------------------------------
+
+_ACT: Dict[str, Any] = {"mesh": None, "seq_parallel": False}
+
+
+def set_activation_context(mesh: Optional[Mesh],
+                           seq_parallel: bool = False) -> None:
+    _ACT["mesh"] = mesh
+    _ACT["seq_parallel"] = seq_parallel
+
+
+def shard_act(x, batch_ok: bool = True):
+    """Constrain an activation (batch, seq, ...) to batch-over-data; when
+    the batch cannot shard (e.g. B=1 long-context) fall back to
+    seq-over-data [+ seq-over-model when seq_parallel].  No-op without
+    context."""
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return x
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    spec = [None] * x.ndim
+    if batch_ok and x.shape[0] % dsize == 0 and x.shape[0] >= dsize:
+        spec[0] = dspec
+    elif x.ndim >= 3 and x.shape[1] % dsize == 0 and x.shape[1] >= dsize:
+        spec[1] = dspec               # B=1 long-context: shard the sequence
+    if _ACT["seq_parallel"] and x.ndim >= 3 and spec[1] is None:
+        msize = mesh.shape["model"]
+        if x.shape[1] % msize == 0 and x.shape[1] >= msize:
+            spec[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,1 @@
+from repro.training import checkpoint, optim, schedules, train_step  # noqa: F401

@@ -1,0 +1,65 @@
+"""Checkpointing: msgpack-serialised pytrees (no orbax offline).
+
+Arrays are stored as (dtype, shape, raw bytes) keyed by their pytree path;
+restore rebuilds into the reference pytree structure (so shardings can be
+reapplied by the caller via device_put).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    blob: Dict[str, Any] = {}
+    for keypath, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        blob[_path_str(keypath)] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(blob))
+    os.replace(tmp, path)
+
+
+def restore_pytree(reference: Any, path: str) -> Any:
+    with open(path, "rb") as f:
+        blob = msgpack.unpackb(f.read())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for keypath, ref_leaf in flat:
+        rec = blob[_path_str(keypath)]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"])
+        arr = arr.reshape(rec["shape"])
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(reference), leaves)
+
+
+def save_train_state(params: Any, opt_state: Any, step: int,
+                     directory: str) -> str:
+    path = os.path.join(directory, f"ckpt_{step:08d}.msgpack")
+    save_pytree({"params": params, "opt": opt_state._asdict()
+                 if hasattr(opt_state, "_asdict") else opt_state}, path)
+    return path

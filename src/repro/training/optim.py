@@ -1,0 +1,114 @@
+"""AdamW optimizer (no optax in this environment — built from scratch).
+
+State dtype is configurable: production large-model configs (llama3-405b
+on a single v5e pod) use bf16 first/second moments so optimizer state fits
+HBM (DESIGN.md hardware-adaptation note); small-model training uses f32.
+The update math always runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                     # peak LR; scaled by the schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"         # bf16 for the memory-tight configs
+    factored: bool = False               # Adafactor-style second moment:
+    # v for rank>=2 params is stored as row/col means (outer-product
+    # reconstruction), shrinking optimizer state from 2x to ~1x params.
+    # The production choice for the HBM-edge 405B config (§Perf H1).
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def _init_v(p, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.factored and _factorable(p):
+        return {"vr": jnp.zeros(p.shape[:-1], dt),          # row means
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+    return jnp.zeros(p.shape, dt)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(lambda p: _init_v(p, cfg), params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _is_matrix(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(params: Any, grads: Any, state: OptState,
+                 cfg: AdamWConfig, lr_scale: jax.Array
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  ``lr_scale`` comes from the schedule (f32 scalar)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        g2 = jnp.square(g) + 1e-30
+        if isinstance(v, dict):                      # factored second moment
+            vr = v["vr"].astype(jnp.float32) * b2 + \
+                jnp.mean(g2, axis=-1) * (1 - b2)
+            vc = v["vc"].astype(jnp.float32) * b2 + \
+                jnp.mean(g2, axis=-2) * (1 - b2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            v32 = vr[..., None] * vc[..., None, :] / \
+                jnp.maximum(denom[..., None], 1e-30)
+            new_v = {"vr": vr.astype(sdt), "vc": vc.astype(sdt)}
+        else:
+            v32 = v.astype(jnp.float32) * b2 + g2 * (1 - b2)
+            new_v = v32.astype(sdt)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if _is_matrix(p):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), m32.astype(sdt), new_v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}

@@ -1,0 +1,45 @@
+"""Learning-rate schedules.
+
+Includes WSD (warmup-stable-decay) [arXiv:2404.06395] — the schedule the
+assigned minicpm-2b was trained with — plus cosine and linear-warmup
+baselines.  Each returns an f32 scale in [0, 1] multiplying the peak LR.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(warmup: int, stable: int, decay: int, floor: float = 0.0
+        ) -> Schedule:
+    """Warmup-Stable-Decay: linear warmup, flat plateau, then a fast decay
+    tail (minicpm uses ~10% of total steps for the decay phase)."""
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup)
+        in_decay = step > warmup + stable
+        prog = jnp.clip((step - warmup - stable) / jnp.maximum(1.0, decay),
+                        0.0, 1.0)
+        tail = 1.0 - (1.0 - floor) * prog
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(in_decay, tail, 1.0))
+        return out
+    return f
+
+
+def constant() -> Schedule:
+    return lambda step: jnp.ones((), jnp.float32)

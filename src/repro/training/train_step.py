@@ -1,0 +1,84 @@
+"""Microbatched train step: grad accumulation + AdamW update, jit-ready.
+
+The global batch is split into ``n_micro`` microbatches scanned
+sequentially; only one microbatch's activations are live at a time (the
+layer scan inside the model is remat'd in groups), which is what lets the
+405B config fit a pod — see EXPERIMENTS.md §Perf for the measured effect.
+
+Two memory-critical knobs (both exposed to the dry-run launcher):
+* ``accum_dtype`` — the gradient-accumulation buffer dtype.  f32 default;
+  bf16 for the HBM-edge configs (405B on one v5e pod).
+* ``grad_shardings`` — explicit sharding constraint for the accumulation
+  buffer.  Without it XLA's propagation pass chose a data-axis-only layout
+  for the scan carry (measured: 101 GiB/device on llama3-405b — see
+  EXPERIMENTS.md §Perf iteration 1); constraining it to the parameter
+  shardings shards it over `model` too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.training.optim import AdamWConfig, OptState, adamw_update
+from repro.training.schedules import Schedule, constant
+
+
+def make_train_step(api: ModelAPI, opt_cfg: AdamWConfig,
+                    schedule: Schedule | None = None,
+                    n_micro: int = 1,
+                    accum_dtype: str = "float32",
+                    grad_shardings: Any = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    schedule = schedule or constant()
+    adt = jnp.dtype(accum_dtype)
+
+    def micro_loss(params, micro_batch):
+        return api.loss(params, micro_batch)
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, Any]):
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+
+        def accum(carry, idx):
+            gsum, lsum = carry
+            micro = {k: jax.lax.dynamic_slice_in_dim(v, idx * mb, mb, 0)
+                     for k, v in batch.items()}
+            (loss, _), grads = grad_fn(params, micro)
+            grads = _constrain(grads)
+            gsum = _constrain(jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), gsum, grads))
+            return (gsum, lsum + loss), None
+
+        gzero = _constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params))
+        if n_micro == 1:
+            (loss, _), grads = grad_fn(params, batch)
+            grads = _constrain(grads)
+        else:
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (gzero, jnp.zeros((), jnp.float32)),
+                jnp.arange(n_micro))
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+
+        lr_scale = schedule(opt_state.step)
+        params, opt_state, info = adamw_update(
+            params, grads, opt_state, opt_cfg, lr_scale)
+        metrics = {"loss": loss, **info, "lr_scale": lr_scale}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — tests
+# must see the single real CPU device (the 512-device override is reserved
+# for the dry-run launcher, per the assignment).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

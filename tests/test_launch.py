@@ -1,0 +1,67 @@
+"""Launcher integration: the multi-pod dry-run lowers+compiles real pairs
+in a subprocess (the 512-device XLA flag must not leak into this test
+process), and the CLI entry points run."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ENV = {**os.environ, "PYTHONPATH": SRC}
+
+
+def _run(args, timeout=600):
+    return subprocess.run([sys.executable, *args], env=ENV, timeout=timeout,
+                          capture_output=True, text=True)
+
+
+@pytest.mark.slow
+def test_dryrun_tconst_long_context(tmp_path):
+    """The paper-technique pair: smollm long_500k lowers serve_step with an
+    O(1) cache on the 16x16 production mesh."""
+    out = tmp_path / "dr.json"
+    r = _run(["-m", "repro.launch.dryrun", "--arch", "smollm-360m",
+              "--shape", "long_500k", "--out", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text())[0]
+    assert rec["attention_mode"] == "tconst"
+    assert rec["memory"]["peak_bytes_est"] < 16 * 2**30
+    assert rec["cost"]["flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_mesh(tmp_path):
+    out = tmp_path / "dr.json"
+    r = _run(["-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+              "--shape", "decode_32k", "--multi-pod", "--out", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text())[0]
+    assert rec["mesh"] == "2x16x16"
+
+
+@pytest.mark.slow
+def test_train_cli_runs():
+    r = _run(["-m", "repro.launch.train", "--arch", "tconst-41m",
+              "--reduced", "--steps", "3", "--batch", "2", "--seq", "16",
+              "--log-every", "1"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "loss=" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli_runs():
+    r = _run(["-m", "repro.launch.serve", "--arch", "tconst-41m",
+              "--reduced", "--prompt-len", "12", "--gen", "10",
+              "--batch", "1"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "cache-hit steps" in r.stdout
+
+
+def test_mesh_factory_shapes():
+    from repro.launch.mesh import make_production_mesh
+    # on 1 device we can only validate the requested logical shape fails
+    # gracefully; the factory itself is exercised by the dry-run subprocess
+    with pytest.raises(Exception):
+        make_production_mesh()        # 256 devices not available here

@@ -1,0 +1,141 @@
+"""Unit tests for the substrate layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.layers import attention as A
+from repro.layers import moe as M
+from repro.layers import rope as R
+from repro.layers.common import init_layernorm, init_rmsnorm, layernorm, \
+    rmsnorm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rmsnorm_unit_scale():
+    p = init_rmsnorm(64)
+    x = jax.random.normal(KEY, (4, 64)) * 17.0
+    y = rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    p = init_layernorm(64)
+    x = jax.random.normal(KEY, (4, 64)) + 5.0
+    y = layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+
+
+def test_rope_is_rotation_norm_preserving():
+    x = jax.random.normal(KEY, (2, 8, 4, 32))
+    pos = jnp.arange(8)
+    cos, sin = R.rope_cos_sin(pos, 32, 10000.0)
+    y = R.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    d = 32
+    q = jax.random.normal(KEY, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def dot_at(m, n):
+        cq, sq = R.rope_cos_sin(jnp.array([m]), d, 10000.0)
+        ck, sk = R.rope_cos_sin(jnp.array([n]), d, 10000.0)
+        qr = R.apply_rope(q, cq, sq)
+        kr = R.apply_rope(k, ck, sk)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-4
+    assert abs(dot_at(7, 0) - dot_at(1007, 1000)) < 1e-4
+
+
+def test_mrope_equals_rope_for_equal_streams():
+    d = 32
+    pos = jnp.arange(16)
+    c1, s1 = R.rope_cos_sin(pos, d, 10000.0)
+    p3 = R.text_positions3(pos)
+    c3, s3 = R.mrope_cos_sin(p3, d, 10000.0, (8, 4, 4))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c3), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), atol=1e-6)
+
+
+def test_sdpa_masked_rows_are_zero():
+    q = jax.random.normal(KEY, (1, 4, 2, 8))
+    k = jax.random.normal(KEY, (1, 6, 2, 8))
+    v = jax.random.normal(KEY, (1, 6, 2, 8))
+    mask = jnp.zeros((1, 4, 6), bool).at[:, 2:].set(True)
+    o = A.sdpa(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o[:, :2]), 0.0, atol=1e-7)
+    assert float(jnp.max(jnp.abs(o[:, 2:]))) > 0
+
+
+def test_gqa_equals_mha_when_kv_repeated():
+    B, L, H, D = 2, 10, 8, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, L, H, D))
+    k2 = jax.random.normal(ks[1], (B, L, 2, D))
+    v2 = jax.random.normal(ks[2], (B, L, 2, D))
+    k8 = jnp.repeat(k2, 4, axis=2)
+    v8 = jnp.repeat(v2, 4, axis=2)
+    pos = jnp.arange(L)
+    mask = A.make_mask(pos, pos, "causal")
+    o_gqa = A.sdpa(q, k2, v2, mask)
+    o_mha = A.sdpa(q, k8, v8, mask)
+    np.testing.assert_allclose(np.asarray(o_gqa), np.asarray(o_mha),
+                               atol=1e-5)
+
+
+def test_decode_attend_incremental_equals_full():
+    cfg = ModelConfig(d_model=64, n_heads=8, n_kv_heads=2)
+    p = A.init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 12, 64))
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+    cos, sin = R.rope_cos_sin(pos, 8, 10000.0)
+    full = A.attention_block(p, x, x, A.make_mask(pos, pos, "causal"),
+                             cos, sin, cos, sin)
+    kc = jnp.zeros((2, 12, 2, 8))
+    vc = jnp.zeros_like(kc)
+    for t in range(12):
+        cq, sq = R.rope_cos_sin(pos[:, t:t + 1], 8, 10000.0)
+        o, kc, vc = A.decode_attend(p, x[:, t:t + 1], kc, vc,
+                                    jnp.full((2,), t), cq, sq)
+        np.testing.assert_allclose(np.asarray(o[:, 0]),
+                                   np.asarray(full[:, t]), atol=1e-5)
+
+
+def test_moe_dropless_matches_dense_oracle():
+    cfg = ModelConfig(d_model=32, n_experts=4, n_experts_per_tok=2,
+                      moe_d_ff=16, n_shared_experts=1)
+    p = M.init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 32))
+    y, aux = M.moe_ffn(p, x, cfg,
+                       capacity_factor=cfg.n_experts / cfg.n_experts_per_tok,
+                       group_size=8)
+    y_ref = M.moe_ffn_dense_oracle(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_moe_aux_loss_minimal_for_uniform_router():
+    """A perfectly uniform router gives aux ~= 1 (Switch normalisation)."""
+    cfg = ModelConfig(d_model=8, n_experts=4, n_experts_per_tok=1,
+                      moe_d_ff=8)
+    logits = jnp.zeros((64, 4))
+    _, _, aux = M.route_topk(logits, 1, 64)
+    np.testing.assert_allclose(float(aux), 1.0, atol=0.3)
+
+
+def test_moe_capacity_drops_tokens_when_skewed():
+    cfg = ModelConfig(d_model=8, n_experts=4, n_experts_per_tok=1,
+                      moe_d_ff=8)
+    logits = jnp.zeros((32, 4)).at[:, 0].set(10.0)    # everyone wants e0
+    dispatch, combine, _ = M.route_topk(logits, 1, capacity=4)
+    kept = float(jnp.sum(dispatch))
+    assert kept == 4.0, "capacity must bound expert load"

@@ -1,0 +1,115 @@
+"""Training substrate: optimizer, schedules, grad accumulation,
+checkpointing, and a small end-to-end convergence run."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.data.pipeline import DataConfig, batches
+from repro.models.api import build_model
+from repro.training.checkpoint import restore_pytree, save_pytree
+from repro.training.optim import AdamWConfig, adamw_update, global_norm, \
+    init_opt_state
+from repro.training.schedules import constant, warmup_cosine, wsd
+from repro.training.train_step import make_train_step
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg,
+                                        jnp.ones(()))
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.full((4,), 1e6)}
+    _, _, info = adamw_update(params, grads, state, cfg, jnp.ones(()))
+    assert float(info["grad_norm"]) > 1e5     # reported pre-clip
+
+
+def test_schedules_shapes():
+    s = warmup_cosine(10, 100)
+    assert float(s(jnp.array(0))) == 0.0
+    assert abs(float(s(jnp.array(10))) - 1.0) < 1e-6
+    assert float(s(jnp.array(100))) < 0.2
+    w = wsd(10, 80, 10)
+    assert abs(float(w(jnp.array(50))) - 1.0) < 1e-6   # stable plateau
+    assert float(w(jnp.array(100))) < 0.1              # decayed
+    assert float(constant()(jnp.array(123))) == 1.0
+
+
+def test_microbatching_matches_full_batch():
+    """Grad accumulation over n_micro microbatches == single big batch."""
+    cfg = reduced(get_config("smollm_360m"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16),
+                                          0, cfg.vocab_size)}
+    outs = []
+    for n_micro in (1, 2, 4):
+        opt = init_opt_state(params, opt_cfg)
+        step = make_train_step(api, opt_cfg, n_micro=n_micro)
+        new_p, _, m = step(params, opt, batch)
+        outs.append((new_p, float(m["loss"])))
+    for (p2, l2) in outs[1:]:
+        assert abs(outs[0][1] - l2) < 1e-5
+        for a, b in zip(jax.tree_util.tree_leaves(outs[0][0]),
+                        jax.tree_util.tree_leaves(p2)):
+            # accumulation order differs between the scan and no-scan
+            # paths; AdamW's rsqrt amplifies ~1e-7 grad noise post-update
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+@pytest.mark.slow
+def test_tconst_training_converges():
+    """End-to-end: reduced paper model on synthetic data; loss must drop
+    by a clear margin within 80 steps."""
+    cfg = reduced(get_config("tconst_41m"), dtype="float32", vocab_size=256)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=3e-3)
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(api, opt_cfg, warmup_cosine(8, 80),
+                                   n_micro=1))
+    dc = DataConfig(vocab_size=256, seq_len=32, batch_size=8, seed=0)
+    losses = []
+    for b in batches(dc, steps=80):
+        params, opt, m = step(params, opt,
+                              {"tokens": jnp.asarray(b["tokens"][:, :32])})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced(get_config("smollm_360m"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save_pytree(params, path)
+    restored = restore_pytree(params, path)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_deterministic():
+    dc = DataConfig(vocab_size=128, seq_len=16, batch_size=2, seed=3)
+    a = next(iter(batches(dc, epoch=1)))
+    b = next(iter(batches(dc, epoch=1)))
+    c = next(iter(batches(dc, epoch=2)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (a["tokens"] != c["tokens"]).any()
+    assert a["tokens"].shape == (2, 17)
+    assert a["tokens"].max() < 128
