@@ -45,7 +45,8 @@ from repro.config import ModelConfig
 from repro.layers import attention as A
 from repro.layers import embed as E
 from repro.layers import rope as R
-from repro.layers.common import (Params, init_rmsnorm, rmsnorm, split_keys)
+from repro.layers.common import (Params, init_rmsnorm, rmsnorm, split_keys,
+                                 where_rows)
 from repro.layers.mlp import init_swiglu, swiglu
 from repro.layers.moe import init_moe, moe_ffn
 
@@ -348,6 +349,55 @@ def kv_cache_bytes(cache: Dict[str, Any]) -> int:
     """KV-cache footprint (the quantity in paper Fig 8g)."""
     keys = [k for k in cache if k.endswith("_k") or k.endswith("_v")]
     return sum(cache[k].size * cache[k].dtype.itemsize for k in keys)
+
+
+# True KV-cache entries vs bookkeeping (token ids, lengths, phase flags) —
+# the explicit partition behind :class:`repro.models.api.DecodeState`.
+KV_KEYS = ("ctx_k", "ctx_v", "gen_k", "gen_v", "hist_k", "hist_v")
+
+# Batch ("slot") axis of every cache entry, so the serving layer can
+# scatter a prefilled row into a slot / select rows at a resync boundary.
+CACHE_BATCH_AXES = {
+    "tokens": 0, "hist_len": 0, "gen_len": 0, "ctx_valid": 0,
+    "ctx_k": 2, "ctx_v": 2, "gen_k": 2, "gen_v": 2,
+    "hist_k": 1, "hist_v": 1,
+}
+
+
+def needs_resync(cache: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
+    """Per-row (B,) bool: the generation window is full, the next decode
+    step must be preceded by a global synchronisation."""
+    return cache["gen_len"] >= cfg.tconst.w_og
+
+
+def resync_rows(params: Params, cache: Dict[str, Any], cfg: ModelConfig,
+                rows: jax.Array, mode: str = "tconst") -> Dict[str, Any]:
+    """Row-selective resync: apply :func:`resync` only to the batch rows
+    where ``rows`` is True, leaving the others bit-identical.
+
+    This is what makes the periodic synchronisation correct under
+    continuous batching: slots admitted at different times sit at
+    different W_og phases, so a boundary crossing in one slot must not
+    fold another slot's half-full generation window into history.
+    """
+    new = resync(params, cache, cfg, mode)
+    return {k: where_rows(rows, new[k], cache[k], CACHE_BATCH_AXES[k])
+            for k in cache}
+
+
+def maybe_resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,
+                 mode: str = "tconst") -> Dict[str, Any]:
+    """Device-side resync decision (no host round-trip): a ``lax.cond`` on
+    the per-row phase counters runs the linear-time synchronisation only
+    when some row's generation window is full.  Fusing this into the
+    jitted decode step lets a whole decode chunk run as one ``lax.scan``
+    with zero per-token host syncs."""
+    rows = needs_resync(cache, cfg)
+    return jax.lax.cond(
+        jnp.any(rows),
+        lambda c: resync_rows(params, c, cfg, rows, mode),
+        lambda c: c,
+        cache)
 
 
 def resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,

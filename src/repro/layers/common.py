@@ -94,3 +94,13 @@ def tree_bytes(tree: Any) -> int:
 
 def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
     return list(jax.random.split(key, n))
+
+
+def where_rows(rows: jax.Array, new: jax.Array, old: jax.Array,
+               axis: int) -> jax.Array:
+    """Per-row select along a batch axis: take ``new`` where ``rows``
+    (B,) is True, else ``old``.  Shared by the TConst row-selective
+    resync and the serving layer's DecodeState slot freezing."""
+    shape = [1] * new.ndim
+    shape[axis] = rows.shape[0]
+    return jnp.where(rows.reshape(shape), new, old)

@@ -1,5 +1,31 @@
-"""Unified model facade: one API per architecture, dispatching to the
-decoder-only LM, the encoder-decoder, or the TConstFormer core.
+"""Unified model facade + the decode-side inference protocol.
+
+Two surfaces live here:
+
+* :class:`ModelAPI` — the training facade (init / forward / loss) plus
+  thin compatibility wrappers for the legacy decode entry points
+  (``init_cache`` / ``prefill`` / ``decode_step`` / ``resync``) used by
+  the dry-run launcher and the complexity benchmarks.
+
+* :class:`DecodeAPI` — the serving protocol.  A decode cache is a typed
+  :class:`DecodeState` (registered pytree) with an explicit ``kv`` vs
+  ``bookkeeping`` partition, so cache-size reporting (paper Fig 8g)
+  reads the partition instead of guessing from field names.  The
+  protocol is slot-oriented for continuous batching:
+
+    ``init_state(slots, max_len)``          fixed-shape multi-slot state
+    ``prefill_into_slot(params, state, slot, tokens)``
+                                            admit one request mid-flight
+    ``step(params, state, token)``          one batched token, with the
+                                            W_og resync fused on-device
+                                            (``lax.cond`` on per-slot
+                                            phase counters — no host
+                                            round-trip)
+    ``maybe_sync(params, state)``           the fused sync, standalone
+
+  :func:`decode_chunk` scans ``step`` so a k-token decode chunk runs as
+  ONE dispatch with zero per-token host syncs.  Implementations exist
+  for the TConst core, the dense LM family, and the encoder-decoder.
 
 Every entry point takes/returns plain pytrees so the launchers can jit
 them with explicit shardings.  ``input_specs`` produces the
@@ -8,10 +34,11 @@ ShapeDtypeStruct stand-ins used by the multi-pod dry-run (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.core import tconst as TC
@@ -35,6 +62,332 @@ def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
     return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# DecodeState: the typed decode cache
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class DecodeState:
+    """Decode-side cache with an explicit kv / bookkeeping partition.
+
+    ``kv`` holds the true KV (and recurrent-state) buffers — the bytes
+    reported for paper Fig 8g.  ``bookkeeping`` holds token-id buffers,
+    lengths and per-slot phase counters, which are NOT KV cache.
+    ``axes`` (static aux data) maps every field to its batch ("slot")
+    axis so the serving layer can scatter a prefilled row into a slot
+    and row-select at resync boundaries without knowing model layouts.
+    """
+
+    kv: Dict[str, jax.Array]
+    bookkeeping: Dict[str, jax.Array]
+    axes: Dict[str, int]
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        children = (
+            (jax.tree_util.GetAttrKey("kv"), self.kv),
+            (jax.tree_util.GetAttrKey("bookkeeping"), self.bookkeeping),
+        )
+        return children, tuple(sorted(self.axes.items()))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kv, bookkeeping = children
+        return cls(kv, bookkeeping, dict(aux))
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_cache(cls, cache: Dict[str, Any], kv_keys: Tuple[str, ...],
+                   axes: Dict[str, int]) -> "DecodeState":
+        kv = {k: v for k, v in cache.items() if k in kv_keys}
+        bk = {k: v for k, v in cache.items() if k not in kv_keys}
+        return cls(kv, bk, {k: axes[k] for k in cache})
+
+    def merged(self) -> Dict[str, Any]:
+        return {**self.bookkeeping, **self.kv}
+
+    # -- accounting ---------------------------------------------------------
+    def kv_bytes(self) -> int:
+        """KV-cache footprint from the explicit partition (works on real
+        arrays and on ShapeDtypeStructs from ``jax.eval_shape``)."""
+        return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(self.kv))
+
+    @property
+    def slots(self) -> int:
+        name, leaf = next(iter(sorted(self.bookkeeping.items())))
+        return leaf.shape[self.axes[name]]
+
+    # -- slot surgery -------------------------------------------------------
+    def _map2(self, other: "DecodeState", fn) -> "DecodeState":
+        kv = {k: fn(k, self.kv[k], other.kv[k]) for k in self.kv}
+        bk = {k: fn(k, self.bookkeeping[k], other.bookkeeping[k])
+              for k in self.bookkeeping}
+        return DecodeState(kv, bk, self.axes)
+
+    def with_slot(self, slot: jax.Array, row: "DecodeState") -> "DecodeState":
+        """Scatter a single-row state (batch size 1) into slot ``slot``."""
+        def upd(name, dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=self.axes[name])
+        return self._map2(row, upd)
+
+    def where_rows(self, rows: jax.Array, other: "DecodeState"
+                   ) -> "DecodeState":
+        """Per-slot select: take self where ``rows`` (B,) is True, else
+        ``other``.  Used to freeze inactive slots inside a decode chunk."""
+        from repro.layers.common import where_rows
+        return self._map2(
+            other, lambda name, a, b: where_rows(rows, a, b,
+                                                 self.axes[name]))
+
+
+# ---------------------------------------------------------------------------
+# Sampling + chunked decode (zero per-token host syncs)
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Per-slot sampling.  logits (B, V); temperature (B,) with <= 0
+    meaning greedy.  Pure device code — safe inside a scanned step."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature, 1e-6)
+    sampled = jax.random.categorical(
+        key, logits / t[:, None], axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+def decode_chunk(decode: "DecodeAPI", params: Any, state: DecodeState,
+                 token: jax.Array, key: jax.Array, temperature: jax.Array,
+                 active: jax.Array, n_steps: int
+                 ) -> Tuple[jax.Array, DecodeState, jax.Array]:
+    """Run ``n_steps`` decode steps as ONE ``lax.scan`` — a single
+    dispatch, zero per-token host round-trips.  The W_og resync fires
+    inside the scanned step via ``lax.cond`` (see ``DecodeAPI.step``),
+    correct per-slot even when slots sit at different phases.
+
+    token: (B,) the token each slot feeds at the first step (its last
+    sampled token).  active: (B,) bool; inactive slots are frozen
+    bit-identically and keep echoing their input token.  Returns
+    (sampled tokens (B, n_steps), state, key).
+    """
+    def body(carry, _):
+        state, tok, key = carry
+        logits, new_state = decode.step(params, state, tok)
+        key, sub = jax.random.split(key)
+        nxt = sample_tokens(logits, temperature, sub)
+        nxt = jnp.where(active, nxt, tok)
+        new_state = new_state.where_rows(active, state)
+        return (new_state, nxt, key), nxt
+
+    (state, _, key), toks = jax.lax.scan(
+        body, (state, token, key), None, length=n_steps)
+    toks = jnp.moveaxis(toks, 0, 1) if n_steps else \
+        jnp.zeros((token.shape[0], 0), jnp.int32)
+    return toks, state, key
+
+
+# ---------------------------------------------------------------------------
+# DecodeAPI protocol + per-family implementations
+# ---------------------------------------------------------------------------
+
+
+class DecodeAPI:
+    """Slot-oriented decode protocol (see module docstring).
+
+    All methods are pure jax functions of their array arguments, so the
+    serving layer can jit them (``step`` composes into
+    :func:`decode_chunk`'s scan).  ``raw_step`` / ``sync`` /
+    ``needs_sync`` are the un-fused pieces used by the instrumented
+    engine path that times cache hits and misses separately (Fig 8).
+    """
+
+    cfg: ModelConfig
+
+    # required surface ------------------------------------------------------
+    def init_state(self, slots: int, max_len: int) -> DecodeState:
+        raise NotImplementedError
+
+    def prefill(self, params, batch: Dict[str, Any], max_len: int
+                ) -> Tuple[jax.Array, DecodeState]:
+        """Full-batch prefill (all slots, same-length prompts)."""
+        raise NotImplementedError
+
+    def prefill_into_slot(self, params, state: DecodeState, slot: jax.Array,
+                          tokens: jax.Array,
+                          extras: Optional[Dict[str, Any]] = None
+                          ) -> Tuple[jax.Array, DecodeState]:
+        """Admit one request: prefill prompt ``tokens`` (L,) and scatter
+        the resulting row into ``slot``.  Returns (logits (V,), state)."""
+        raise NotImplementedError
+
+    def raw_step(self, params, state: DecodeState, token: jax.Array
+                 ) -> Tuple[jax.Array, DecodeState]:
+        """One cache-hit decode step, NO sync check (instrumentation)."""
+        raise NotImplementedError
+
+    # sync surface (identity for models without periodic resync) ------------
+    def needs_sync(self, state: DecodeState) -> jax.Array:
+        return jnp.zeros((state.slots,), bool)
+
+    def sync(self, params, state: DecodeState) -> DecodeState:
+        return state
+
+    def maybe_sync(self, params, state: DecodeState) -> DecodeState:
+        return state
+
+    # fused step ------------------------------------------------------------
+    def step(self, params, state: DecodeState, token: jax.Array
+             ) -> Tuple[jax.Array, DecodeState]:
+        """maybe_sync + raw_step: the unit scanned by decode_chunk."""
+        return self.raw_step(params, self.maybe_sync(params, state), token)
+
+
+@dataclasses.dataclass(frozen=True)
+class TConstDecode(DecodeAPI):
+    """Paper §4 serving: O(1) cache-hit steps, periodic O(N) resync.
+
+    The resync decision lives ON DEVICE: ``step`` checks the per-slot
+    ``gen_len`` phase counters and runs the W_og-boundary global
+    synchronisation through ``lax.cond``, applied row-selectively so
+    slots admitted at different times stay token-for-token identical to
+    their solo runs (mode="tlin" keeps the O(N) history KV per block).
+    """
+
+    cfg: ModelConfig
+
+    @property
+    def mode(self) -> str:
+        return self.cfg.attention_mode
+
+    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
+        return DecodeState.from_cache(cache, TC.KV_KEYS, TC.CACHE_BATCH_AXES)
+
+    def init_state(self, slots: int, max_len: int) -> DecodeState:
+        return self._wrap(
+            TC.init_tconst_cache(self.cfg, slots, max_len, self.mode))
+
+    def prefill(self, params, batch, max_len):
+        logits, cache = TC.prefill(params, batch["tokens"], self.cfg,
+                                   max_len, mode=self.mode)
+        return logits, self._wrap(cache)
+
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+        max_len = state.bookkeeping["tokens"].shape[1]
+        logits, row = TC.prefill(params, tokens[None], self.cfg, max_len,
+                                 mode=self.mode)
+        return logits[0], state.with_slot(slot, self._wrap(row))
+
+    def raw_step(self, params, state, token):
+        logits, cache = TC.decode_step(params, state.merged(), token,
+                                       self.cfg, mode=self.mode)
+        return logits, self._wrap(cache)
+
+    def needs_sync(self, state):
+        return TC.needs_resync(state.merged(), self.cfg)
+
+    def sync(self, params, state):
+        cache = state.merged()
+        rows = TC.needs_resync(cache, self.cfg)
+        return self._wrap(
+            TC.resync_rows(params, cache, self.cfg, rows, self.mode))
+
+    def maybe_sync(self, params, state):
+        return self._wrap(
+            TC.maybe_resync(params, state.merged(), self.cfg, self.mode))
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseDecode(DecodeAPI):
+    """Decoder-only LM family (dense / moe / ssm / hybrid / vlm): a
+    conventional growing KV cache (or O(1) recurrent state for ssm),
+    no periodic sync."""
+
+    cfg: ModelConfig
+
+    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
+        return DecodeState.from_cache(cache, LM.KV_KEYS, LM.CACHE_BATCH_AXES)
+
+    def init_state(self, slots: int, max_len: int) -> DecodeState:
+        return self._wrap(LM.init_kv_cache(self.cfg, slots, max_len))
+
+    def _max_len(self, state: DecodeState, fallback: int) -> int:
+        for key in ("k", "dense_k"):
+            if key in state.kv:
+                return state.kv[key].shape[2]
+        return fallback                      # pure ssm: no positional buffer
+
+    def prefill(self, params, batch, max_len):
+        logits, cache = LM.lm_prefill(
+            params, batch["tokens"], self.cfg, max_len,
+            vision_embeds=batch.get("vision_embeds"),
+            vision_mask=batch.get("vision_mask"))
+        return logits, self._wrap(cache)
+
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+        extras = extras or {}
+        max_len = self._max_len(state, tokens.shape[0])
+        logits, cache = LM.lm_prefill(
+            params, tokens[None], self.cfg, max_len,
+            vision_embeds=None if "vision_embeds" not in extras else
+            extras["vision_embeds"][None],
+            vision_mask=None if "vision_mask" not in extras else
+            extras["vision_mask"][None])
+        return logits[0], state.with_slot(slot, self._wrap(cache))
+
+    def raw_step(self, params, state, token):
+        logits, cache = LM.lm_decode_step(params, state.merged(), token,
+                                          self.cfg)
+        return logits, self._wrap(cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecDecode(DecodeAPI):
+    """Encoder-decoder: per-session encoder memory is pre-projected into
+    the per-layer cross K/V cache at admission."""
+
+    cfg: ModelConfig
+
+    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
+        return DecodeState.from_cache(cache, ED.KV_KEYS, ED.CACHE_BATCH_AXES)
+
+    def init_state(self, slots: int, max_len: int) -> DecodeState:
+        return self._wrap(ED.init_encdec_cache(self.cfg, slots, max_len))
+
+    def prefill(self, params, batch, max_len):
+        logits, cache = ED.encdec_prefill(params, batch["tokens"],
+                                          batch["audio_feats"], self.cfg,
+                                          max_len)
+        return logits, self._wrap(cache)
+
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+        if not extras or "audio_feats" not in extras:
+            raise ValueError(
+                "encoder-decoder sessions need extras={'audio_feats': "
+                "(T_enc, frontend_dim)} at submission")
+        max_len = state.kv["k"].shape[2]
+        logits, cache = ED.encdec_prefill(
+            params, tokens[None], extras["audio_feats"][None], self.cfg,
+            max_len)
+        return logits[0], state.with_slot(slot, self._wrap(cache))
+
+    def raw_step(self, params, state, token):
+        logits, cache = ED.encdec_decode_step(params, state.merged(), token,
+                                              self.cfg)
+        return logits, self._wrap(cache)
+
+
+def build_decode(cfg: ModelConfig) -> DecodeAPI:
+    if _is_tconst(cfg):
+        return TConstDecode(cfg)
+    if cfg.is_encdec:
+        return EncDecDecode(cfg)
+    return DenseDecode(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -79,49 +432,36 @@ class ModelAPI:
         total = ce + self.cfg.router_aux_coef * aux
         return total, {"ce": ce, "aux": aux}
 
-    # -- serving --------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int):
-        cfg = self.cfg
-        if _is_tconst(cfg):
-            return TC.init_tconst_cache(cfg, batch, max_len,
-                                        mode=cfg.attention_mode)
-        if cfg.is_encdec:
-            return ED.init_encdec_cache(cfg, batch, max_len)
-        return LM.init_kv_cache(cfg, batch, max_len)
+    # -- serving (compat wrappers over DecodeAPI; cache is a DecodeState) ---
+    @property
+    def decode(self) -> DecodeAPI:
+        return build_decode(self.cfg)
 
-    def prefill(self, params, batch: Dict[str, Any], max_len: int):
+    def init_cache(self, batch: int, max_len: int) -> DecodeState:
+        return self.decode.init_state(batch, max_len)
+
+    def prefill(self, params, batch: Dict[str, Any], max_len: int
+                ) -> Tuple[jax.Array, DecodeState]:
+        return self.decode.prefill(params, batch, max_len)
+
+    def decode_step(self, params, state: DecodeState, token: jax.Array
+                    ) -> Tuple[jax.Array, DecodeState]:
+        return self.decode.raw_step(params, state, token)
+
+    def resync(self, params, state: DecodeState) -> DecodeState:
+        """TConst periodic global synchronisation — full, all-rows
+        (the legacy schedule where every row shares one phase)."""
         cfg = self.cfg
-        tokens = batch["tokens"]
         if _is_tconst(cfg):
-            return TC.prefill(params, tokens, cfg, max_len,
+            cache = TC.resync(params, state.merged(), cfg,
                               mode=cfg.attention_mode)
-        if cfg.is_encdec:
-            return ED.encdec_prefill(params, tokens, batch["audio_feats"],
-                                     cfg, max_len)
-        return LM.lm_prefill(
-            params, tokens, cfg, max_len,
-            vision_embeds=batch.get("vision_embeds"),
-            vision_mask=batch.get("vision_mask"))
+            return DecodeState.from_cache(cache, TC.KV_KEYS,
+                                          TC.CACHE_BATCH_AXES)
+        return state
 
-    def decode_step(self, params, cache, token: jax.Array):
-        cfg = self.cfg
-        if _is_tconst(cfg):
-            return TC.decode_step(params, cache, token, cfg,
-                                  mode=cfg.attention_mode)
-        if cfg.is_encdec:
-            return ED.encdec_decode_step(params, cache, token, cfg)
-        return LM.lm_decode_step(params, cache, token, cfg)
-
-    def resync(self, params, cache):
-        """TConst periodic global synchronisation (no-op otherwise)."""
-        cfg = self.cfg
-        if _is_tconst(cfg):
-            return TC.resync(params, cache, cfg, mode=cfg.attention_mode)
-        return cache
-
-    def needs_resync(self, cache) -> jax.Array:
+    def needs_resync(self, state: DecodeState) -> jax.Array:
         if _is_tconst(self.cfg):
-            return cache["gen_len"] >= self.cfg.tconst.w_og
+            return self.decode.needs_sync(state)
         return jnp.zeros((), bool)
 
     # -- dry-run specs -----------------------------------------------------------
@@ -142,7 +482,7 @@ class ModelAPI:
                                      jnp.dtype(cfg.dtype))
         return specs
 
-    def cache_specs(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def cache_specs(self, batch: int, max_len: int) -> DecodeState:
         """ShapeDtypeStructs of the serve cache (eval_shape: no alloc)."""
         return jax.eval_shape(
             lambda: self.init_cache(batch, max_len))

@@ -166,6 +166,12 @@ def encdec_forward(params: Params, tokens: jax.Array, audio_feats: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+# Cache partition for the serving layer (repro.models.api.DecodeState):
+# true KV cache vs bookkeeping, and the batch ("slot") axis of each entry.
+KV_KEYS = ("k", "v", "cross_k", "cross_v")
+CACHE_BATCH_AXES = {"len": 0, "k": 1, "v": 1, "cross_k": 1, "cross_v": 1}
+
+
 def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int
                       ) -> Dict[str, Any]:
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim

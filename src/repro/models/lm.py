@@ -244,6 +244,16 @@ def _remat_group(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+# Cache partition for the serving layer (repro.models.api.DecodeState):
+# true KV/recurrent state (counted in Fig-8g bytes) vs bookkeeping, and the
+# batch ("slot") axis of every entry.
+KV_KEYS = ("k", "v", "dense_k", "dense_v", "ssm", "conv")
+CACHE_BATCH_AXES = {
+    "len": 0, "k": 1, "v": 1, "dense_k": 1, "dense_v": 1,
+    "ssm": 1, "conv": 1,
+}
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int
                   ) -> Dict[str, Any]:
     n_dense = cfg.first_dense_layers if cfg.is_moe else 0

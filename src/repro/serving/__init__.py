@@ -1,1 +1,4 @@
 from repro.serving import engine  # noqa: F401
+from repro.serving.engine import Engine, StepStats  # noqa: F401
+from repro.serving.scheduler import SlotScheduler  # noqa: F401
+from repro.serving.session import Session  # noqa: F401

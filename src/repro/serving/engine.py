@@ -1,43 +1,65 @@
-"""Batched autoregressive serving engine.
+"""Batched generation engine on top of the session/scheduler serving API.
 
-Drives prefill -> decode steps for any ModelAPI; for TConst-mode models it
-interposes the paper's periodic global synchronisation (`resync`) every
-``W_og`` generated tokens — the amortized-O(1) schedule of §4:
-``W_og - 1`` constant-time cache-hit steps, then ONE linear-time cache
-miss.  The engine jit-compiles the three stages separately so the
-benchmark harness can time hits and misses independently (paper Fig 8).
+The serving stack has three layers:
+
+* ``repro.models.api.DecodeAPI`` — the per-model decode protocol.  Its
+  ``step`` fuses the TConst W_og-boundary resync ON DEVICE (``lax.cond``
+  on per-slot phase counters), and ``decode_chunk`` scans it so a chunk
+  of k tokens is ONE dispatch with zero per-token host round-trips.
+* ``repro.serving.scheduler.SlotScheduler`` + ``repro.serving.session``
+  — continuous batching: per-request sessions with their own prompt
+  lengths / sampling params / streaming callbacks, admitted and evicted
+  mid-flight into a fixed-shape slotted batch.
+* :class:`Engine` (this module) — the thin uniform-batch wrapper kept
+  for benchmarks and examples: same-length prompts in, ``(B, n)`` ids
+  out.  ``generate(record_stats=False)`` uses the chunked zero-sync
+  path; ``record_stats=True`` switches to the instrumented step-at-a-
+  time reference path that times cache hits and misses separately —
+  the amortized-O(1) schedule of §4 (``W_og - 1`` constant-time hits,
+  then ONE linear-time miss) for the Fig 8 latency split.
+
+Cache accounting (``cache_bytes``) reads the ``DecodeState`` kv /
+bookkeeping partition — the id buffer and counters are excluded by
+construction, not by name-matching.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import ModelAPI
+from repro.models.api import ModelAPI, decode_chunk
 
 
 @dataclasses.dataclass
 class StepStats:
-    kind: str              # "prefill" | "hit" | "miss"
+    kind: str              # "prefill" | "hit" | "miss" | "chunk"
     seconds: float
+    tokens: int = 1        # tokens produced by this entry (chunks: many)
 
 
 class Engine:
     def __init__(self, api: ModelAPI, params: Any, max_len: int,
                  sample_temperature: float = 0.0, seed: int = 0):
         self.api = api
+        self.decode = api.decode
         self.params = params
         self.max_len = max_len
         self.temperature = sample_temperature
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, b, max_len))
-        self._decode = jax.jit(api.decode_step)
-        self._resync = jax.jit(api.resync)
+            lambda p, b: self.decode.prefill(p, b, max_len))
+        self._step = jax.jit(self.decode.raw_step)     # hit (no sync check)
+        self._sync = jax.jit(self.decode.sync)         # miss
+        self._needs = jax.jit(self.decode.needs_sync)
+        self._chunk = jax.jit(
+            functools.partial(decode_chunk, self.decode),
+            static_argnames=("n_steps",))
         self.stats: List[StepStats] = []
 
     def _select(self, logits: jax.Array) -> jax.Array:
@@ -47,45 +69,78 @@ class Engine:
         return jax.random.categorical(
             sub, logits / self.temperature, axis=-1).astype(jnp.int32)
 
+    # ------------------------------------------------------------------
     def generate(self, batch: Dict[str, Any], n_tokens: int,
                  record_stats: bool = False) -> np.ndarray:
         """batch: prompt inputs (same-length prompts).  Returns
         (B, n_tokens) generated ids."""
         t0 = time.perf_counter()
-        logits, cache = jax.block_until_ready(
+        logits, state = jax.block_until_ready(
             self._prefill(self.params, batch))
         if record_stats:
             self.stats.append(StepStats("prefill", time.perf_counter() - t0))
-        out = []
         token = self._select(logits)
-        out.append(token)
+        if record_stats:
+            return self._generate_instrumented(state, token, n_tokens)
+        return self._generate_chunked(state, token, n_tokens)
+
+    def _generate_chunked(self, state, token, n_tokens: int) -> np.ndarray:
+        """Fast path: the remaining n_tokens - 1 steps run as ONE jitted
+        lax.scan — resync fires via lax.cond inside the scanned step, so
+        there are zero per-token host syncs."""
+        B = token.shape[0]
+        temps = jnp.full((B,), self.temperature, jnp.float32)
+        active = jnp.ones((B,), bool)
+        self.key, sub = jax.random.split(self.key)
+        toks, state, _ = self._chunk(self.params, state, token, sub, temps,
+                                     active, n_steps=n_tokens - 1)
+        return np.concatenate(
+            [np.asarray(token)[:, None], np.asarray(toks)], axis=1)
+
+    def _generate_instrumented(self, state, token, n_tokens: int
+                               ) -> np.ndarray:
+        """Reference path: one dispatch per token, resync decided on host,
+        so each hit/miss is timed separately (paper Fig 8)."""
+        out = [token]
         for _ in range(n_tokens - 1):
-            kind = "hit"
-            if bool(np.asarray(self.api.needs_resync(cache)).all()):
+            if bool(np.asarray(self._needs(state)).any()):
                 t0 = time.perf_counter()
-                cache = jax.block_until_ready(
-                    self._resync(self.params, cache))
-                if record_stats:
-                    self.stats.append(
-                        StepStats("miss", time.perf_counter() - t0))
+                state = jax.block_until_ready(
+                    self._sync(self.params, state))
+                self.stats.append(
+                    StepStats("miss", time.perf_counter() - t0))
             t0 = time.perf_counter()
-            logits, cache = jax.block_until_ready(
-                self._decode(self.params, cache, token))
-            if record_stats:
-                self.stats.append(StepStats(kind, time.perf_counter() - t0))
+            logits, state = jax.block_until_ready(
+                self._step(self.params, state, token))
+            self.stats.append(StepStats("hit", time.perf_counter() - t0))
             token = self._select(logits)
             out.append(token)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
     # ------------------------------------------------------------------
+    def time_chunked_decode(self, batch: Dict[str, Any], n_tokens: int
+                            ) -> float:
+        """Wall-clock seconds of the (n_tokens - 1)-token decode chunk
+        alone — ONE dispatch, prefill and compile excluded.  This is the
+        per-token quantity that is O(1) in context length for tconst."""
+        logits, state = jax.block_until_ready(
+            self._prefill(self.params, batch))
+        token = self._select(logits)
+        B = token.shape[0]
+        temps = jnp.full((B,), self.temperature, jnp.float32)
+        active = jnp.ones((B,), bool)
+        self.key, sub = jax.random.split(self.key)
+        args = (self.params, state, token, sub, temps, active)
+        jax.block_until_ready(
+            self._chunk(*args, n_steps=n_tokens - 1))    # warm-up/compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._chunk(*args, n_steps=n_tokens - 1))
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
     def cache_bytes(self, batch_size: int) -> int:
-        """KV-cache footprint of this model at max_len (paper Fig 8g)."""
-        cache = jax.eval_shape(
-            lambda: self.api.init_cache(batch_size, self.max_len))
-        total = 0
-        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
-            name = str(path[-1])
-            if "tokens" in name or "len" in name or "valid" in name:
-                continue   # id buffer / bookkeeping, not KV cache
-            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
-        return total
+        """KV-cache footprint at max_len (paper Fig 8g), from the
+        DecodeState kv/bookkeeping partition (no allocation)."""
+        state = jax.eval_shape(
+            lambda: self.decode.init_state(batch_size, self.max_len))
+        return state.kv_bytes()

@@ -1,0 +1,155 @@
+"""Slot-based continuous-batching scheduler for streaming inference.
+
+The scheduler owns one fixed-shape multi-slot ``DecodeState`` and admits
+/ evicts :class:`~repro.serving.session.Session` objects mid-flight:
+
+* **admit** — a free slot is filled by ``prefill_into_slot``: the
+  session's prompt (its own length; compiled once per distinct length)
+  is prefilled as a single row and scattered into the batched state.
+  Running slots are untouched, so a new request joins a half-decoded
+  batch without disturbing it.
+* **decode** — all slots advance together in chunks of ``chunk_size``
+  tokens.  A chunk is ONE jitted ``lax.scan`` over the fused step: the
+  TConst W_og resync fires on device via ``lax.cond`` on the per-slot
+  phase counters, so a chunk performs zero per-token host round-trips
+  (one device->host transfer per chunk, for the sampled ids).  Slots
+  admitted at different times sit at different resync phases; the
+  row-selective sync keeps every slot token-identical to a solo run.
+* **retire** — a session that exhausts its budget frees its slot (the
+  slot is cleared so stale phase counters cannot re-trigger syncs).
+
+Chunk timings are recorded as ``StepStats(kind="chunk")`` entries; the
+first entry includes the one-time jit compile of the chunked scan, so
+aggregate with a median (or drop it) when reporting dispatch cost.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import time
+from typing import Any, Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
+from repro.serving.session import Session
+
+
+class SlotScheduler:
+    def __init__(self, decode: DecodeAPI, params: Any, slots: int,
+                 max_len: int, chunk_size: int = 8, seed: int = 0):
+        # accept a ModelAPI facade too (duck-typed .decode)
+        if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
+            decode = decode.decode
+        if slots < 1:
+            raise ValueError("scheduler needs at least one decode slot")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be positive")
+        self.decode = decode
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.chunk_size = chunk_size
+
+        self.state = decode.init_state(slots, max_len)
+        self._empty_row = decode.init_state(1, max_len)
+        self._prefill_slot = jax.jit(decode.prefill_into_slot)
+        self._chunk = jax.jit(functools.partial(decode_chunk, decode),
+                              static_argnames=("n_steps",))
+        self._clear = jax.jit(lambda st, slot, row: st.with_slot(slot, row))
+
+        self.key = jax.random.PRNGKey(seed)
+        self.last_token = jnp.zeros((slots,), jnp.int32)
+        self.temps = np.zeros((slots,), np.float32)
+        self.active = np.zeros((slots,), bool)
+        self.sessions: List[Optional[Session]] = [None] * slots
+        self.pending: Deque[Session] = collections.deque()
+        self.stats: List["StepStats"] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, session: Session) -> Session:
+        """Queue a session; it is admitted at the next chunk boundary."""
+        # decode writes token ids into the slot's fixed (max_len,) buffer;
+        # an overflowing write would be silently dropped by the scatter and
+        # corrupt the next resync, so reject oversized requests up front
+        # (chunk_size headroom: a session may overshoot its budget by up
+        # to one chunk before it is retired at the chunk boundary).
+        need = len(session.prompt) + session.max_new_tokens + self.chunk_size
+        if need > self.max_len:
+            raise ValueError(
+                f"session {session.sid}: prompt {len(session.prompt)} + "
+                f"max_new_tokens {session.max_new_tokens} (+ chunk "
+                f"{self.chunk_size}) exceeds max_len {self.max_len}")
+        self.pending.append(session)
+        return session
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def kv_bytes(self) -> int:
+        return self.state.kv_bytes()
+
+    # ------------------------------------------------------------------
+    def _admit_pending(self) -> None:
+        free = [i for i in range(self.slots) if not self.active[i]]
+        while self.pending and free:
+            slot = free.pop(0)
+            sess = self.pending.popleft()
+            logits, self.state = self._prefill_slot(
+                self.params, self.state, np.int32(slot),
+                jnp.asarray(sess.prompt), extras=sess.extras)
+            self.key, sub = jax.random.split(self.key)
+            t0 = sample_tokens(logits[None],
+                               jnp.full((1,), sess.temperature), sub)[0]
+            self.last_token = self.last_token.at[slot].set(t0)
+            sess.slot = slot
+            self.sessions[slot] = sess
+            self.active[slot] = True
+            self.temps[slot] = sess.temperature
+            sess.deliver([int(t0)])          # first token: prefill logits
+            if sess.done:
+                self._release(slot)
+                free.insert(0, slot)
+
+    def _release(self, slot: int) -> None:
+        self.sessions[slot] = None
+        self.active[slot] = False
+        self.temps[slot] = 0.0
+        # clear the slot so stale phase counters can't keep firing the
+        # on-device resync cond for an empty row
+        self.state = self._clear(self.state, np.int32(slot),
+                                 self._empty_row)
+        self.last_token = self.last_token.at[slot].set(0)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit pending sessions, then decode ONE chunk for all active
+        slots (a single dispatch).  Returns False when idle."""
+        from repro.serving.engine import StepStats
+        self._admit_pending()
+        if not self.active.any():
+            return False
+        t0 = time.perf_counter()
+        toks, self.state, self.key = self._chunk(
+            self.params, self.state, self.last_token, self.key,
+            jnp.asarray(self.temps), jnp.asarray(self.active),
+            n_steps=self.chunk_size)
+        self.last_token = toks[:, -1]
+        host_toks = np.asarray(toks)         # the ONE host sync per chunk
+        self.stats.append(StepStats("chunk", time.perf_counter() - t0,
+                                    tokens=self.chunk_size))
+        for slot in np.nonzero(self.active)[0]:
+            sess = self.sessions[slot]
+            sess.deliver(host_toks[slot])
+            if sess.done:
+                self._release(slot)
+        return True
+
+    def run(self) -> None:
+        """Drive chunks until every submitted session has completed."""
+        while True:
+            if not self.step() and not self.pending:
+                return

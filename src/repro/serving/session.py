@@ -1,0 +1,70 @@
+"""Per-request inference sessions for the streaming serving path.
+
+A :class:`Session` is the unit the scheduler admits into a decode slot:
+it owns its prompt (any length), sampling parameters, token budget and
+an optional streaming callback fired once per generated token.  Sessions
+are plain host-side objects — all device state lives in the scheduler's
+fixed-shape :class:`repro.models.api.DecodeState`.
+
+Typical use (see ``repro.launch.serve --sessions`` for a runnable demo)::
+
+    sched = SlotScheduler(build_model(cfg).decode, params,
+                          slots=4, max_len=512)
+    s = sched.submit(Session(prompt, max_new_tokens=32,
+                             on_token=lambda sess, t: print(t)))
+    sched.run()            # continuous batching; tokens stream via callback
+    print(s.tokens)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Session:
+    """One generation request.
+
+    prompt: 1-D int32 token ids (any length — slots in the same batch may
+    have different prompt lengths and resync phases).
+    max_new_tokens: total tokens to generate, INCLUDING the first token
+    sampled from the prefill logits.
+    on_token: optional ``f(session, token)`` streaming callback.
+    extras: per-request model inputs beyond tokens (e.g. ``audio_feats``
+    for the encoder-decoder, ``vision_embeds``/``vision_mask`` for VLMs).
+    """
+
+    prompt: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    on_token: Optional[Callable[["Session", int], None]] = None
+    extras: Optional[Dict[str, Any]] = None
+
+    # filled by the scheduler -----------------------------------------------
+    sid: int = dataclasses.field(default_factory=lambda: next(_IDS))
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+
+    def __post_init__(self) -> None:
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.max_new_tokens >= 1, "need at least the prefill token"
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.tokens)
+
+    def deliver(self, tokens) -> None:
+        """Append generated tokens (clipped to the budget) and stream
+        them through the callback; marks the session done at budget."""
+        for t in list(tokens)[: self.remaining]:
+            self.tokens.append(int(t))
+            if self.on_token is not None:
+                self.on_token(self, int(t))
+        if self.remaining == 0:
+            self.done = True

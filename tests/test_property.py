@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an OPTIONAL dev dependency (see pyproject.toml): when
+it is not installed this module skips instead of breaking collection of
+the whole suite.  CI installs it so these tests always run there.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import ModelConfig, TConstConfig
 from repro.core import tconst as T

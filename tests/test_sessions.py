@@ -1,0 +1,198 @@
+"""Session/scheduler serving API: resync-boundary correctness of the
+fused (on-device, lax.cond) synchronisation, continuous batching with
+staggered admission, and the zero-host-sync decode chunk."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.core import tconst as TC
+from repro.models.api import build_model, decode_chunk
+from repro.serving.engine import Engine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+
+
+@pytest.fixture(scope="module", params=["tconst", "tlin"])
+def setup(request):
+    cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                  attention_mode=request.param)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _solo(api, params, prompt, n, max_len=128):
+    eng = Engine(api, params, max_len=max_len)
+    return eng.generate({"tokens": jnp.asarray(prompt)[None]}, n)[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Resync-boundary correctness
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_across_boundary_matches_stepwise_reference(setup):
+    """A chunked (single lax.scan, on-device lax.cond resync) generation
+    crossing several W_og boundaries must equal the step-at-a-time
+    reference path where the resync decision is made on host."""
+    cfg, api, params = setup
+    p = {"tokens": jnp.ones((2, 12), jnp.int32)}   # phase 12 % 8 = 4
+    fast = Engine(api, params, max_len=128).generate(p, 30)
+    ref_eng = Engine(api, params, max_len=128)
+    ref = ref_eng.generate(p, 30, record_stats=True)
+    np.testing.assert_array_equal(fast, ref)
+    if cfg.attention_mode == "tconst":
+        assert [s.kind for s in ref_eng.stats].count("miss") >= 3
+
+
+def test_fused_step_resyncs_on_device(setup):
+    """At gen_len == W_og the fused step folds the window into history
+    inside the jitted step (no host decision) and matches sync+step."""
+    cfg, api, params = setup
+    dec = api.decode
+    w_og = cfg.tconst.w_og
+    _, state = dec.prefill(params, {"tokens": jnp.ones((1, w_og),
+                                                       jnp.int32)}, 64)
+    assert bool(dec.needs_sync(state).all())       # window exactly full
+    tok = jnp.array([3], jnp.int32)
+    lg_fused, st_fused = jax.jit(dec.step)(params, state, tok)
+    lg_ref, st_ref = dec.raw_step(params, dec.sync(params, state), tok)
+    np.testing.assert_allclose(np.asarray(lg_fused), np.asarray(lg_ref),
+                               atol=1e-5)
+    assert int(st_fused.bookkeeping["gen_len"][0]) == 1
+    assert int(st_fused.bookkeeping["hist_len"][0]) == w_og
+
+
+def test_row_selective_resync_leaves_other_rows_untouched(setup):
+    """Only rows at the W_og boundary are resynced: a mid-phase row must
+    come through resync_rows bit-identical."""
+    cfg, api, params = setup
+    dec = api.decode
+    _, state = dec.prefill(params, {"tokens": jnp.ones((2, 12),
+                                                       jnp.int32)}, 64)
+    cache = state.merged()
+    rows = jnp.array([True, False])
+    out = TC.resync_rows(params, cache, cfg, rows, cfg.attention_mode)
+    assert int(out["gen_len"][0]) == 0             # row 0 folded
+    assert int(out["gen_len"][1]) == int(cache["gen_len"][1])
+    for k in cache:
+        ax = TC.CACHE_BATCH_AXES[k]
+        old_row1 = np.take(np.asarray(cache[k]), 1, axis=ax)
+        new_row1 = np.take(np.asarray(out[k]), 1, axis=ax)
+        np.testing.assert_array_equal(old_row1, new_row1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: staggered admission, variable prompt lengths
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_sessions_match_solo_generation(setup):
+    """Two sessions with different prompt lengths, admitted at different
+    times (different W_og phases inside one batch), must each produce
+    exactly the tokens of their single-session generation."""
+    cfg, api, params = setup
+    pa = (np.arange(1, 10) % cfg.vocab_size).astype(np.int32)     # len 9
+    pb = ((np.arange(1, 14) * 7) % cfg.vocab_size).astype(np.int32)
+
+    sched = SlotScheduler(api.decode, params, slots=2, max_len=128,
+                          chunk_size=4)
+    sa = sched.submit(Session(pa, max_new_tokens=25))
+    sched.step()       # A runs a chunk alone -> staggered resync phases
+    sb = sched.submit(Session(pb, max_new_tokens=21))
+    sched.run()
+    assert sa.done and sb.done
+    assert sa.tokens == _solo(api, params, pa, 25)
+    assert sb.tokens == _solo(api, params, pb, 21)
+
+
+def test_sessions_stream_through_callback_and_reuse_slots(setup):
+    cfg, api, params = setup
+    streamed = []
+    sched = SlotScheduler(api.decode, params, slots=1, max_len=128,
+                          chunk_size=4)
+    for i in range(3):                       # 3 sessions through 1 slot
+        sched.submit(Session(np.full(5 + i, 2, np.int32),
+                             max_new_tokens=6,
+                             on_token=lambda s, t: streamed.append(
+                                 (s.sid, t))))
+    sched.run()
+    assert len(streamed) == 18
+    assert len({sid for sid, _ in streamed}) == 3
+
+
+# ---------------------------------------------------------------------------
+# Zero per-token host syncs
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs(val):
+    if isinstance(val, jax.core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, jax.core.Jaxpr):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def _jaxpr_has_host_comms(jaxpr) -> bool:
+    bad = ("callback", "infeed", "outfeed", "host")
+    for eqn in jaxpr.eqns:
+        if any(b in eqn.primitive.name for b in bad):
+            return True
+        for v in eqn.params.values():
+            for inner in _subjaxprs(v):
+                if _jaxpr_has_host_comms(inner):
+                    return True
+    return False
+
+
+def test_decode_chunk_is_single_dispatch_without_host_comms(setup):
+    """A k-token decode chunk is one traced computation: its jaxpr holds
+    no callback/transfer primitives, and a scheduler run records only
+    'chunk' StepStats — never per-token 'hit'/'miss' entries."""
+    cfg, api, params = setup
+    dec = api.decode
+    state = jax.eval_shape(lambda: dec.init_state(2, 64))
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    temps = jax.ShapeDtypeStruct((2,), jnp.float32)
+    act = jax.ShapeDtypeStruct((2,), jnp.bool_)
+    closed = jax.make_jaxpr(
+        lambda p, s, t, k, tp, a: decode_chunk(dec, p, s, t, k, tp, a,
+                                               n_steps=12))(
+        jax.eval_shape(api.init, jax.random.PRNGKey(0)),
+        state, tok, key, temps, act)
+    assert not _jaxpr_has_host_comms(closed.jaxpr)
+
+    sched = SlotScheduler(dec, params, slots=2, max_len=128, chunk_size=6)
+    sched.submit(Session(np.full(12, 1, np.int32), max_new_tokens=13))
+    sched.run()
+    kinds = {s.kind for s in sched.stats}
+    assert kinds == {"chunk"}
+    # 1 prefill token + 12 chunked tokens in exactly 2 dispatches
+    assert len(sched.stats) == 2
+    assert all(s.tokens == 6 for s in sched.stats)
+
+
+# ---------------------------------------------------------------------------
+# DecodeState partition (cache accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_state_partition_and_bytes(setup):
+    cfg, api, params = setup
+    state = api.init_cache(2, 256)
+    assert set(state.bookkeeping) == {"tokens", "hist_len", "gen_len",
+                                      "ctx_valid"}
+    assert all(k.endswith("_k") or k.endswith("_v") for k in state.kv)
+    # partition-based accounting agrees with the core's name-based one
+    assert state.kv_bytes() == TC.kv_cache_bytes(state.merged())
+    if cfg.attention_mode == "tconst":
+        # O(1): kv bytes independent of max_len; bookkeeping is the only
+        # O(N) residue (int32 id buffer)
+        big = api.init_cache(2, 1 << 14)
+        assert big.kv_bytes() == state.kv_bytes()
