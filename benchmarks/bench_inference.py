@@ -1,15 +1,22 @@
 """Paper Fig. 8: inference latency, cache-hit/miss split, KV-cache memory,
 and speedup ratios vs context length N, for Base / TLinFormer /
-TConstFormer at matched (reduced) scale on CPU.
+TConstFormer at matched (reduced) scale on CPU — plus the DecodeAPI v2
+cache-layout sweep (dense / paged / int8).
 
 Validates the paper's qualitative claims at reduced scale:
   (a-c) hit latency: baseline grows with N, TLin grows (gentler),
         TConst is FLAT;
-  (g)   KV cache: baseline/TLin O(N), TConst O(1);
+  (g)   KV cache: baseline/TLin O(N), TConst O(1) — reported per
+        layout, so paged pools and int8 scales show their true bytes;
   (h-i) hit-step speedup of TConst over Base / TLin grows with N.
+
+Besides the CSV rows, the run writes ``BENCH_inference.json`` (cwd) with
+tokens/s, cache bytes per layout and the compacted resync-miss cost, so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 from typing import Dict, List
 
 import jax
@@ -18,10 +25,12 @@ import numpy as np
 
 from repro.config import get_config, reduced
 from repro.models.api import build_model
+from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
 
 N_SWEEP = [256, 512, 1024, 2048]
 GEN = 10
+OUT_JSON = "BENCH_inference.json"
 
 
 def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
@@ -45,6 +54,39 @@ def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
     }
 
 
+def _layout_sweep(api, params, emit) -> Dict:
+    """DecodeAPI v2: cache bytes and chunked throughput per layout, plus
+    the paged-pool saving for a short-session scenario (slots sized for
+    max_len, sessions needing a quarter of it — Fig 8g with layouts)."""
+    max_len, slots, short = 512, 4, 128
+    out: Dict[str, Dict] = {}
+    for kind in ("dense", "paged", "int8"):
+        eng = Engine(api, params, max_len=max_len, layout=kind)
+        batch = {"tokens": jnp.ones((1, short), jnp.int32)}
+        tps = (GEN - 1) / eng.time_chunked_decode(batch, GEN)
+        full_bytes = eng.cache_bytes(slots)
+        row = {"cache_bytes": full_bytes, "chunk_tps": tps}
+        if kind == "paged":
+            # pool sized for the short sessions actually served
+            page = 64
+            pool = slots * (-(-short // page))
+            spec = LayoutSpec(kind="paged", page_size=page, pool_pages=pool)
+            short_eng = Engine(api, params, max_len=max_len, layout=spec)
+            row["cache_bytes_short_pool"] = short_eng.cache_bytes(slots)
+        out[kind] = row
+        emit(f"layout/{kind}/cache_bytes", row["cache_bytes"],
+             f"{slots} slots @ max_len={max_len}")
+        emit(f"layout/{kind}/chunk_tps", tps, "tok/s")
+    emit("layout/paged/cache_bytes_short_pool",
+         out["paged"]["cache_bytes_short_pool"],
+         f"pool sized for {short}-token sessions; dense pays "
+         f"{out['dense']['cache_bytes']}")
+    emit("layout/int8_shrink",
+         out["dense"]["cache_bytes"] / out["int8"]["cache_bytes"],
+         "x smaller KV (~4x for f32)")
+    return out
+
+
 def run(emit) -> None:
     variants = {
         "base": reduced(get_config("tconst_41m"), dtype="float32",
@@ -54,6 +96,7 @@ def run(emit) -> None:
         "tconst": reduced(get_config("tconst_41m"), dtype="float32"),
     }
     results: Dict[str, List[Dict]] = {}
+    layouts: Dict[str, Dict] = {}
     for name, cfg in variants.items():
         api = build_model(cfg)
         params = api.init(jax.random.PRNGKey(0))
@@ -68,6 +111,10 @@ def run(emit) -> None:
             emit(f"chunked_decode_tps/{name}/N={n}", r["chunk_tps"],
                  "tok/s, single-dispatch chunked decode")
         results[name] = rows
+        if name in ("tlin", "tconst"):
+            layouts[name] = _layout_sweep(api, params,
+                                          lambda k, v, d="": emit(
+                                              f"{name}/{k}", v, d))
 
     # derived paper claims ---------------------------------------------------
     tc = results["tconst"]
@@ -85,3 +132,19 @@ def run(emit) -> None:
         emit(f"fig8hi_speedup_vs_{other}/N={N_SWEEP[0]}", sp_small, "x")
         emit(f"fig8hi_speedup_vs_{other}/N={N_SWEEP[-1]}", sp_big,
              "x (paper: grows with N)")
+
+    payload = {
+        "n_sweep": N_SWEEP,
+        "gen": GEN,
+        # per-variant rows: hit/miss latency (miss = compacted row-wise
+        # resync cost for tconst/tlin), cache bytes, chunked tok/s
+        "variants": results,
+        "layouts": layouts,
+        "derived": {
+            "tconst_hit_flatness": flat,
+            "tconst_cache_O1_ratio": cache_ratio,
+        },
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("bench_inference_json", 0.0, f"written to {OUT_JSON}")

@@ -332,6 +332,7 @@ def init_tconst_cache(cfg: ModelConfig, batch: int, max_len: int,
         "tokens": jnp.zeros((batch, max_len), jnp.int32),
         "hist_len": jnp.zeros((batch,), jnp.int32),
         "gen_len": jnp.zeros((batch,), jnp.int32),
+        "done": jnp.zeros((batch,), bool),
         "ctx_k": jnp.zeros((nb, tc.h + 1, batch, tc.w_oh, kv, hd), dt),
         "ctx_v": jnp.zeros((nb, tc.h + 1, batch, tc.w_oh, kv, hd), dt),
         "ctx_valid": jnp.zeros((batch, tc.w_oh), bool),
@@ -358,10 +359,17 @@ KV_KEYS = ("ctx_k", "ctx_v", "gen_k", "gen_v", "hist_k", "hist_v")
 # Batch ("slot") axis of every cache entry, so the serving layer can
 # scatter a prefilled row into a slot / select rows at a resync boundary.
 CACHE_BATCH_AXES = {
-    "tokens": 0, "hist_len": 0, "gen_len": 0, "ctx_valid": 0,
+    "tokens": 0, "hist_len": 0, "gen_len": 0, "done": 0, "ctx_valid": 0,
     "ctx_k": 2, "ctx_v": 2, "gen_k": 2, "gen_v": 2,
     "hist_k": 1, "hist_v": 1,
 }
+
+# Cache-layout metadata (repro.models.layouts): which KV fields have an
+# O(N) length axis that a PagedLayout can split into pages (only the
+# TLinFormer history KV — the tconst ctx/gen buffers are already O(1)),
+# and which are float KV that a QuantizedLayout may store as int8.
+LENGTH_AXES = {"hist_k": 2, "hist_v": 2}
+QUANT_FIELDS = KV_KEYS
 
 
 def needs_resync(cache: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
@@ -391,13 +399,79 @@ def maybe_resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,
     the per-row phase counters runs the linear-time synchronisation only
     when some row's generation window is full.  Fusing this into the
     jitted decode step lets a whole decode chunk run as one ``lax.scan``
-    with zero per-token host syncs."""
+    with zero per-token host syncs.
+
+    PR-1 reference path: the cond computes the FULL-BATCH resync and
+    row-selects, so non-boundary rows are computed then discarded.  The
+    serving protocol now uses :func:`resync_rows_compacted` instead;
+    this stays as the equivalence oracle for the parity tests.
+    """
     rows = needs_resync(cache, cfg)
     return jax.lax.cond(
         jnp.any(rows),
         lambda c: resync_rows(params, c, cfg, rows, mode),
         lambda c: c,
         cache)
+
+
+def gather_row(cache: Dict[str, Any], i: jax.Array) -> Dict[str, Any]:
+    """Extract batch row ``i`` of every cache entry (batch size 1)."""
+    return {k: jax.lax.dynamic_slice_in_dim(v, i, 1, CACHE_BATCH_AXES[k])
+            for k, v in cache.items()}
+
+
+def scatter_row(cache: Dict[str, Any], i: jax.Array,
+                row: Dict[str, Any]) -> Dict[str, Any]:
+    """Write a batch-1 row back into batch row ``i``."""
+    return {k: jax.lax.dynamic_update_slice_in_dim(
+        cache[k], row[k].astype(cache[k].dtype), i, CACHE_BATCH_AXES[k])
+        for k in cache}
+
+
+def pending_resync_rows(cache: Dict[str, Any], cfg: ModelConfig
+                        ) -> jax.Array:
+    """(B,) bool: rows that must sync before the next step — the window
+    is full AND the slot is not EOS-finished (done rows are frozen by
+    the chunk, so syncing them would be wasted O(N) work every step)."""
+    return jnp.logical_and(needs_resync(cache, cfg),
+                           jnp.logical_not(cache["done"]))
+
+
+def resync_rows_compacted(params: Params, cache: Dict[str, Any],
+                          cfg: ModelConfig, rows: jax.Array,
+                          mode: str = "tconst") -> Dict[str, Any]:
+    """Compacted row-wise resync: a ``lax.while_loop`` that gathers ONE
+    boundary row at a time, runs its O(N) synchronisation at batch size
+    1, and scatters it back — non-boundary rows are never computed.
+
+    With S staggered slots this replaces PR-1's up-to-S full-batch O(N)
+    misses per W_og window with S single-row misses, restoring the
+    paper's amortized O(1) per slot under continuous batching.  Zero
+    pending rows means zero loop iterations, so this IS the fused
+    on-device decision — no outer ``lax.cond`` needed.
+
+    When EVERY row is pending (the uniform-batch path: all slots share
+    one phase) the loop would serialize B batch-1 resyncs where one
+    batched resync does the same work in parallel, so that case routes
+    to the full-batch :func:`resync` instead; partially-synchronized
+    batches still serialize their pending subset (noted in ROADMAP).
+    """
+    def compacted(cache):
+        def cond(carry):
+            return jnp.any(carry[1])
+
+        def body(carry):
+            cache, pending = carry
+            i = jnp.argmax(pending).astype(jnp.int32)
+            row = resync(params, gather_row(cache, i), cfg, mode)
+            return scatter_row(cache, i, row), pending.at[i].set(False)
+
+        cache, _ = jax.lax.while_loop(cond, body, (cache, rows))
+        return cache
+
+    return jax.lax.cond(jnp.all(rows),
+                        lambda c: resync(params, c, cfg, mode),
+                        compacted, cache)
 
 
 def resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,

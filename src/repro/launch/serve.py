@@ -1,6 +1,15 @@
 """Serving launcher: uniform-batch generation (Engine) or the session-
 based streaming path (SlotScheduler) with continuous batching.
 
+Both paths take ``--layout dense|paged|int8`` — the physical cache
+representation behind the DecodeState (see ``repro.models.layouts``).
+``paged`` splits length-axis KV into fixed-size pages (``--page-size``)
+in a shared pool; ``--pool-pages`` sizes the pool below
+``slots * pages_per_slot`` so short sessions stop paying ``max_len``
+bytes (sessions mode only — the scheduler is the page allocator).
+``int8`` stores KV quantized with per-vector scales (~4x smaller,
+tokens may differ within the documented tolerance).
+
 Uniform batch (benchmark-style, same-length prompts)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
@@ -11,7 +20,7 @@ chunked zero-host-sync decode; prints each session's stream and checks
 it against single-session generation)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
-      --sessions 3 --gen 24 --slots 2
+      --sessions 3 --gen 24 --slots 2 --layout paged --pool-pages 12
 """
 from __future__ import annotations
 
@@ -23,10 +32,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_config, reduced
-from repro.models.api import build_model
+from repro.models.api import build_decode, build_model
+from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
+
+
+def _layout_spec(args) -> LayoutSpec:
+    return LayoutSpec(kind=args.layout, page_size=args.page_size,
+                      pool_pages=args.pool_pages or None)
 
 
 def run_sessions(cfg, api, params, args) -> int:
@@ -38,7 +53,8 @@ def run_sessions(cfg, api, params, args) -> int:
                            size=args.prompt_len + 5 * i).astype(np.int32)
                for i in range(args.sessions)]
 
-    sched = SlotScheduler(api.decode, params, slots=args.slots,
+    decode = build_decode(cfg, _layout_spec(args))
+    sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
                           chunk_size=args.chunk, seed=args.seed)
@@ -53,6 +69,7 @@ def run_sessions(cfg, api, params, args) -> int:
         sessions.append(sched.submit(Session(
             p, max_new_tokens=args.gen,
             temperature=args.temperature,
+            eos_id=args.eos if args.eos >= 0 else None,
             on_token=stream if args.verbose else None)))
         # staggered admission: run one chunk between submissions so slots
         # sit at different W_og resync phases
@@ -62,6 +79,7 @@ def run_sessions(cfg, api, params, args) -> int:
 
     total = sum(len(s.tokens) for s in sessions)
     print(f"[serve] arch={cfg.name} mode={cfg.attention_mode} "
+          f"layout={sched.layout.name} "
           f"served {len(sessions)} sessions ({total} tokens) on "
           f"{args.slots} slots in {dt:.2f}s ({total / dt:.1f} tok/s)")
     chunks = [s for s in sched.stats if s.kind == "chunk"]
@@ -70,19 +88,24 @@ def run_sessions(cfg, api, params, args) -> int:
         print(f"[serve] decode chunks: n={len(chunks)} "
               f"({args.chunk} tokens/dispatch, zero per-token host syncs) "
               f"median={np.median([s.seconds for s in chunks]) * 1e3:.2f}ms")
-    print(f"[serve] KV-cache bytes ({args.slots} slots): "
-          f"{sched.kv_bytes()}")
+    print(f"[serve] KV-cache bytes ({args.slots} slots, "
+          f"{sched.layout.name} layout): {sched.kv_bytes()}")
 
     ok = True
-    if args.temperature <= 0.0:           # greedy: must match solo runs
-        eng = Engine(api, params, max_len=sched.max_len)
-        for s, p in zip(sessions, prompts):
-            ref = eng.generate({"tokens": jnp.asarray(p)[None]},
-                               args.gen)[0].tolist()
-            match = s.tokens == ref
-            ok = ok and match
-            print(f"[serve]   session {s.sid} (prompt {len(p)}): "
-                  f"{len(s.tokens)} tokens, matches solo run: {match}")
+    if args.temperature <= 0.0 and args.eos < 0:
+        if args.layout == "int8":
+            print("[serve]   (int8 layout: tokens may differ from the "
+                  "dense solo run within the quantization tolerance — "
+                  "skipping the exact-match check)")
+        else:                         # greedy: must match solo runs
+            eng = Engine(api, params, max_len=sched.max_len)
+            for s, p in zip(sessions, prompts):
+                ref = eng.generate({"tokens": jnp.asarray(p)[None]},
+                                   args.gen)[0].tolist()
+                match = s.tokens == ref
+                ok = ok and match
+                print(f"[serve]   session {s.sid} (prompt {len(p)}): "
+                      f"{len(s.tokens)} tokens, matches solo run: {match}")
     return 0 if ok else 1
 
 
@@ -96,6 +119,18 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--layout", default="dense",
+                    choices=["dense", "paged", "int8"],
+                    help="physical cache layout behind the DecodeState")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per page (paged layout)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="total pages in the shared pool; 0 = full "
+                         "slots*pages_per_slot (sessions mode can go "
+                         "smaller — the scheduler allocates pages)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="end-of-sequence token id for sessions mode "
+                         "(< 0 disables early termination)")
     ap.add_argument("--sessions", type=int, default=0,
                     help="serve N streaming sessions (staggered admission, "
                          "variable prompt lengths) instead of one batch")
@@ -118,7 +153,8 @@ def main(argv=None) -> int:
 
     max_len = args.max_len or (args.prompt_len + args.gen + 64)
     eng = Engine(api, params, max_len=max_len,
-                 sample_temperature=args.temperature, seed=args.seed)
+                 sample_temperature=args.temperature, seed=args.seed,
+                 layout=_layout_spec(args))
 
     key = jax.random.PRNGKey(args.seed + 1)
     batch = {"tokens": jax.random.randint(
@@ -140,15 +176,16 @@ def main(argv=None) -> int:
     hits = [s.seconds for s in eng.stats if s.kind == "hit"]
     misses = [s.seconds for s in eng.stats if s.kind == "miss"]
     print(f"[serve] arch={cfg.name} mode={cfg.attention_mode} "
-          f"generated {out.shape} in {dt:.2f}s "
+          f"layout={args.layout} generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     if hits:
         print(f"[serve] cache-hit steps: n={len(hits)} "
               f"mean={np.mean(hits)*1e3:.2f}ms")
     if misses:
-        print(f"[serve] cache-miss resyncs: n={len(misses)} "
-              f"mean={np.mean(misses)*1e3:.2f}ms")
-    print(f"[serve] KV-cache bytes @max_len: {eng.cache_bytes(args.batch)}")
+        print(f"[serve] cache-miss resyncs (compacted row-wise): "
+              f"n={len(misses)} mean={np.mean(misses)*1e3:.2f}ms")
+    print(f"[serve] KV-cache bytes @max_len ({args.layout} layout): "
+          f"{eng.cache_bytes(args.batch)}")
     return 0
 
 

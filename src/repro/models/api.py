@@ -11,21 +11,33 @@ Two surfaces live here:
   :class:`DecodeState` (registered pytree) with an explicit ``kv`` vs
   ``bookkeeping`` partition, so cache-size reporting (paper Fig 8g)
   reads the partition instead of guessing from field names.  The
-  protocol is slot-oriented for continuous batching:
+  *physical* representation of ``kv`` is a pluggable
+  :mod:`repro.models.layouts` backend (dense / paged / int8) riding in
+  the pytree aux data; the decode kernels always see the dense logical
+  view through ``DecodeState.merged``.  The protocol is slot-oriented
+  for continuous batching:
 
     ``init_state(slots, max_len)``          fixed-shape multi-slot state
     ``prefill_into_slot(params, state, slot, tokens)``
                                             admit one request mid-flight
     ``step(params, state, token)``          one batched token, with the
                                             W_og resync fused on-device
-                                            (``lax.cond`` on per-slot
-                                            phase counters — no host
-                                            round-trip)
-    ``maybe_sync(params, state)``           the fused sync, standalone
+    ``sync_mask(state)``                    per-slot (B,) boundary mask
+    ``sync_rows(params, state, rows)``      COMPACTED row-wise resync:
+                                            gather only the masked rows,
+                                            run their O(N) sync at batch
+                                            size 1, scatter back — non-
+                                            boundary rows are never
+                                            computed (amortized O(1)
+                                            under staggered batching)
 
-  :func:`decode_chunk` scans ``step`` so a k-token decode chunk runs as
-  ONE dispatch with zero per-token host syncs.  Implementations exist
-  for the TConst core, the dense LM family, and the encoder-decoder.
+  ``maybe_sync`` is now *derived* (``sync_rows`` over ``sync_mask`` —
+  zero pending rows means zero work), replacing PR-1's monolithic
+  compute-all-rows-then-select cond.  :func:`decode_chunk` scans
+  ``step`` so a k-token decode chunk runs as ONE dispatch with zero
+  per-token host syncs, freezing slots whose on-device ``done`` flag
+  was set by EOS.  Implementations exist for the TConst core, the dense
+  LM family, and the encoder-decoder.
 
 Every entry point takes/returns plain pytrees so the launchers can jit
 them with explicit shardings.  ``input_specs`` produces the
@@ -43,6 +55,7 @@ import numpy as np
 from repro.config import ModelConfig, ShapeConfig
 from repro.core import tconst as TC
 from repro.models import encdec as ED
+from repro.models import layouts as LT
 from repro.models import lm as LM
 
 
@@ -72,19 +85,25 @@ def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
 @jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class DecodeState:
-    """Decode-side cache with an explicit kv / bookkeeping partition.
+    """Decode-side cache with an explicit kv / bookkeeping partition and a
+    pluggable physical layout.
 
-    ``kv`` holds the true KV (and recurrent-state) buffers — the bytes
-    reported for paper Fig 8g.  ``bookkeeping`` holds token-id buffers,
-    lengths and per-slot phase counters, which are NOT KV cache.
-    ``axes`` (static aux data) maps every field to its batch ("slot")
-    axis so the serving layer can scatter a prefilled row into a slot
-    and row-select at resync boundaries without knowing model layouts.
+    ``kv`` holds the true KV (and recurrent-state) buffers in the
+    PHYSICAL representation chosen by ``layout`` — dense arrays, paged
+    pools, or int8 + scales; ``kv_bytes`` (the paper Fig 8g quantity)
+    therefore reflects the actual layout.  ``bookkeeping`` holds token-id
+    buffers, lengths, per-slot phase counters and the EOS ``done`` mask
+    (NOT KV cache), plus layout-owned fields (``layout__*`` prefix, e.g.
+    the paged page table) which are hidden from the dense view.
+    ``axes`` (static aux data) maps every DENSE field to its batch
+    ("slot") axis; ``layout`` (static aux data) translates dense <->
+    physical and implements layout-aware slot surgery.
     """
 
     kv: Dict[str, jax.Array]
     bookkeeping: Dict[str, jax.Array]
     axes: Dict[str, int]
+    layout: Any = dataclasses.field(default_factory=LT.DenseLayout)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten_with_keys(self):
@@ -92,28 +111,64 @@ class DecodeState:
             (jax.tree_util.GetAttrKey("kv"), self.kv),
             (jax.tree_util.GetAttrKey("bookkeeping"), self.bookkeeping),
         )
-        return children, tuple(sorted(self.axes.items()))
+        return children, (tuple(sorted(self.axes.items())), self.layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kv, bookkeeping = children
-        return cls(kv, bookkeeping, dict(aux))
+        axes, layout = aux
+        return cls(kv, bookkeeping, dict(axes), layout)
 
     # -- construction -------------------------------------------------------
     @classmethod
-    def from_cache(cls, cache: Dict[str, Any], kv_keys: Tuple[str, ...],
-                   axes: Dict[str, int]) -> "DecodeState":
-        kv = {k: v for k, v in cache.items() if k in kv_keys}
+    def from_dense(cls, cache: Dict[str, Any], kv_keys: Tuple[str, ...],
+                   axes: Dict[str, int], layout: Any = None,
+                   layout_bk: Optional[Dict[str, Any]] = None
+                   ) -> "DecodeState":
+        """Wrap a dense logical cache dict, packing kv into ``layout``'s
+        physical representation.  ``layout_bk`` carries layout-owned
+        bookkeeping (e.g. a live page table) across re-wraps; omitted,
+        the layout initialises it fresh."""
+        layout = LT.DenseLayout() if layout is None else layout
+        dense_kv = {k: v for k, v in cache.items() if k in kv_keys}
         bk = {k: v for k, v in cache.items() if k not in kv_keys}
-        return cls(kv, bk, {k: axes[k] for k in cache})
+        if layout_bk is None:
+            name = next(iter(sorted(bk)))
+            slots = bk[name].shape[axes[name]]
+            layout_bk = layout.init_bookkeeping(slots)
+        bk.update(layout_bk)
+        all_axes = {**{k: axes[k] for k in cache}, **layout.bookkeeping_axes()}
+        return cls(layout.pack(dense_kv, bk, all_axes), bk, all_axes, layout)
+
+    def layout_bookkeeping(self) -> Dict[str, Any]:
+        return {k: v for k, v in self.bookkeeping.items()
+                if k.startswith(LT.LAYOUT_BK_PREFIX)}
 
     def merged(self) -> Dict[str, Any]:
-        return {**self.bookkeeping, **self.kv}
+        """The dense LOGICAL cache dict the decode kernels consume
+        (layout-owned bookkeeping filtered out, kv unpacked)."""
+        bk = {k: v for k, v in self.bookkeeping.items()
+              if not k.startswith(LT.LAYOUT_BK_PREFIX)}
+        return {**bk, **self.layout.unpack(self.kv, self.bookkeeping,
+                                           self.axes)}
+
+    def dense_shapes(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Shapes/dtypes of the dense logical kv view, without computing
+        the unpack (works on concrete arrays and under tracing)."""
+        return jax.eval_shape(
+            lambda kv, bk: self.layout.unpack(kv, bk, self.axes),
+            self.kv, self.bookkeeping)
+
+    def with_bookkeeping(self, **updates: Any) -> "DecodeState":
+        bk = dict(self.bookkeeping)
+        bk.update(updates)
+        return DecodeState(self.kv, bk, self.axes, self.layout)
 
     # -- accounting ---------------------------------------------------------
     def kv_bytes(self) -> int:
-        """KV-cache footprint from the explicit partition (works on real
-        arrays and on ShapeDtypeStructs from ``jax.eval_shape``)."""
+        """KV-cache footprint of the PHYSICAL representation (works on
+        real arrays and on ShapeDtypeStructs from ``jax.eval_shape``), so
+        paged pools and int8+scales report their true bytes."""
         return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
                    for l in jax.tree_util.tree_leaves(self.kv))
 
@@ -123,27 +178,35 @@ class DecodeState:
         return leaf.shape[self.axes[name]]
 
     # -- slot surgery -------------------------------------------------------
-    def _map2(self, other: "DecodeState", fn) -> "DecodeState":
-        kv = {k: fn(k, self.kv[k], other.kv[k]) for k in self.kv}
-        bk = {k: fn(k, self.bookkeeping[k], other.bookkeeping[k])
-              for k in self.bookkeeping}
-        return DecodeState(kv, bk, self.axes)
-
     def with_slot(self, slot: jax.Array, row: "DecodeState") -> "DecodeState":
-        """Scatter a single-row state (batch size 1) into slot ``slot``."""
-        def upd(name, dst, src):
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=self.axes[name])
-        return self._map2(row, upd)
+        """Scatter a single-row state (batch size 1, dense layout) into
+        slot ``slot``.  Bookkeeping is a per-field row write; kv goes
+        through the layout (paged: page-map surgery touching only the
+        slot's own pages)."""
+        bk = dict(self.bookkeeping)
+        for name, src in row.bookkeeping.items():
+            if name.startswith(LT.LAYOUT_BK_PREFIX):
+                continue
+            bk[name] = jax.lax.dynamic_update_slice_in_dim(
+                self.bookkeeping[name], src.astype(bk[name].dtype), slot,
+                axis=self.axes[name])
+        dense_row = row.layout.unpack(row.kv, row.bookkeeping, row.axes)
+        kv = self.layout.write_slot(self.kv, self.bookkeeping, slot,
+                                    dense_row, self.axes)
+        return DecodeState(kv, bk, self.axes, self.layout)
 
     def where_rows(self, rows: jax.Array, other: "DecodeState"
                    ) -> "DecodeState":
         """Per-slot select: take self where ``rows`` (B,) is True, else
-        ``other``.  Used to freeze inactive slots inside a decode chunk."""
+        ``other``.  Used to freeze inactive/done slots inside a decode
+        chunk."""
         from repro.layers.common import where_rows
-        return self._map2(
-            other, lambda name, a, b: where_rows(rows, a, b,
-                                                 self.axes[name]))
+        bk = {name: where_rows(rows, leaf, other.bookkeeping[name],
+                               self.axes[name])
+              for name, leaf in self.bookkeeping.items()}
+        kv = self.layout.where_rows(rows, self.kv, other.kv,
+                                    self.bookkeeping, self.axes)
+        return DecodeState(kv, bk, self.axes, self.layout)
 
 
 # ---------------------------------------------------------------------------
@@ -164,25 +227,38 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
 
 def decode_chunk(decode: "DecodeAPI", params: Any, state: DecodeState,
                  token: jax.Array, key: jax.Array, temperature: jax.Array,
-                 active: jax.Array, n_steps: int
+                 active: jax.Array, n_steps: int,
+                 eos: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, DecodeState, jax.Array]:
     """Run ``n_steps`` decode steps as ONE ``lax.scan`` — a single
     dispatch, zero per-token host round-trips.  The W_og resync fires
-    inside the scanned step via ``lax.cond`` (see ``DecodeAPI.step``),
-    correct per-slot even when slots sit at different phases.
+    inside the scanned step via the compacted row-wise ``sync_rows``
+    (see ``DecodeAPI.step``), correct per-slot even when slots sit at
+    different phases.
 
     token: (B,) the token each slot feeds at the first step (its last
     sampled token).  active: (B,) bool; inactive slots are frozen
-    bit-identically and keep echoing their input token.  Returns
-    (sampled tokens (B, n_steps), state, key).
+    bit-identically and keep echoing their input token.  eos: optional
+    (B,) int32 end-of-sequence id per slot (< 0 disables); a slot that
+    samples its EOS sets the on-device ``done`` flag in
+    ``state.bookkeeping`` and is frozen for the rest of the chunk — the
+    scheduler evicts it at the chunk boundary.  Returns (sampled tokens
+    (B, n_steps), state, key).
     """
     def body(carry, _):
         state, tok, key = carry
+        done = state.bookkeeping["done"]
+        live = jnp.logical_and(active, jnp.logical_not(done))
         logits, new_state = decode.step(params, state, tok)
         key, sub = jax.random.split(key)
         nxt = sample_tokens(logits, temperature, sub)
-        nxt = jnp.where(active, nxt, tok)
-        new_state = new_state.where_rows(active, state)
+        nxt = jnp.where(live, nxt, tok)
+        new_state = new_state.where_rows(live, state)
+        if eos is not None:
+            hit = jnp.logical_and(live,
+                                  jnp.logical_and(eos >= 0, nxt == eos))
+            new_state = new_state.with_bookkeeping(
+                done=jnp.logical_or(done, hit))
         return (new_state, nxt, key), nxt
 
     (state, _, key), toks = jax.lax.scan(
@@ -202,9 +278,12 @@ class DecodeAPI:
 
     All methods are pure jax functions of their array arguments, so the
     serving layer can jit them (``step`` composes into
-    :func:`decode_chunk`'s scan).  ``raw_step`` / ``sync`` /
-    ``needs_sync`` are the un-fused pieces used by the instrumented
-    engine path that times cache hits and misses separately (Fig 8).
+    :func:`decode_chunk`'s scan).  The sync surface is row-wise:
+    ``sync_mask`` names the boundary rows, ``sync_rows`` syncs exactly
+    those rows (compacted — non-masked rows are never computed), and
+    ``maybe_sync`` is derived from the two.  ``raw_step`` is the
+    un-fused cache-hit step used by the instrumented engine path that
+    times hits and misses separately (Fig 8).
     """
 
     cfg: ModelConfig
@@ -232,20 +311,70 @@ class DecodeAPI:
         raise NotImplementedError
 
     # sync surface (identity for models without periodic resync) ------------
-    def needs_sync(self, state: DecodeState) -> jax.Array:
+    def sync_mask(self, state: DecodeState) -> jax.Array:
+        """(B,) bool: rows whose next step must be preceded by the O(N)
+        synchronisation."""
         return jnp.zeros((state.slots,), bool)
 
-    def sync(self, params, state: DecodeState) -> DecodeState:
+    def sync_rows(self, params, state: DecodeState, rows: jax.Array
+                  ) -> DecodeState:
+        """Sync exactly the rows where ``rows`` is True; all other rows
+        come through bit-identical AND uncomputed."""
         return state
 
     def maybe_sync(self, params, state: DecodeState) -> DecodeState:
-        return state
+        """Derived fused sync: ``sync_rows`` over ``sync_mask``.  Zero
+        masked rows means zero sync work — this is the on-device
+        decision, no host round-trip."""
+        return self.sync_rows(params, state, self.sync_mask(state))
 
     # fused step ------------------------------------------------------------
     def step(self, params, state: DecodeState, token: jax.Array
              ) -> Tuple[jax.Array, DecodeState]:
         """maybe_sync + raw_step: the unit scanned by decode_chunk."""
         return self.raw_step(params, self.maybe_sync(params, state), token)
+
+    # shared layout wiring (subclasses set the _KV_KEYS / _AXES /
+    # _LENGTH_AXES / _QUANT_FIELDS class attributes) -------------------------
+    _KV_KEYS: Tuple[str, ...] = ()
+    _AXES: Dict[str, int] = {}
+    _LENGTH_AXES: Dict[str, int] = {}
+    _QUANT_FIELDS: Tuple[str, ...] = ()
+
+    def _bind(self, slots: int, max_len: int):
+        return LT.bind_layout(self.layout, slots=slots, max_len=max_len,
+                              length_axes=self._LENGTH_AXES,
+                              quant_fields=self._QUANT_FIELDS,
+                              dtype=self.cfg.dtype)
+
+    def _wrap_new(self, cache: Dict[str, Any], max_len: int) -> DecodeState:
+        layout = self._bind(cache["done"].shape[0], max_len)
+        return DecodeState.from_dense(cache, self._KV_KEYS, self._AXES,
+                                      layout)
+
+    def _rewrap(self, state: DecodeState, cache: Dict[str, Any]
+                ) -> DecodeState:
+        return DecodeState.from_dense(cache, self._KV_KEYS, self._AXES,
+                                      state.layout,
+                                      layout_bk=state.layout_bookkeeping())
+
+    def _row_state(self, cache: Dict[str, Any]) -> DecodeState:
+        """Wrap a batch-1 prefilled row (always dense — the batched
+        state's layout does the slot scatter)."""
+        return DecodeState.from_dense(cache, self._KV_KEYS, self._AXES)
+
+    def _check_prefill_layout(self, cache: Dict[str, Any], max_len: int
+                              ) -> None:
+        """Full-batch prefill can't place rows in an under-sized paged
+        pool — but only when the cache actually has paged fields."""
+        layout = self._bind(cache["done"].shape[0], max_len)
+        if isinstance(layout, LT.PagedLayout) and not layout.preallocated \
+                and any(f in cache for f, _ in layout.fields):
+            raise ValueError(
+                "full-batch prefill cannot place rows in an under-sized "
+                "paged pool (pool_pages < slots * pages_per_slot); use "
+                "the scheduler's page allocator via prefill_into_slot, "
+                "or leave pool_pages=None")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,72 +383,92 @@ class TConstDecode(DecodeAPI):
 
     The resync decision lives ON DEVICE: ``step`` checks the per-slot
     ``gen_len`` phase counters and runs the W_og-boundary global
-    synchronisation through ``lax.cond``, applied row-selectively so
-    slots admitted at different times stay token-for-token identical to
-    their solo runs (mode="tlin" keeps the O(N) history KV per block).
+    synchronisation through the compacted ``sync_rows`` while-loop —
+    each boundary row is gathered, synced at batch size 1 and scattered
+    back, so slots admitted at different times stay token-for-token
+    identical to their solo runs without paying for each other's misses
+    (mode="tlin" keeps the O(N) history KV per block, which the paged
+    layout can split into pages).
     """
 
     cfg: ModelConfig
+    layout: LT.LayoutSpec = LT.DENSE_SPEC
+
+    _KV_KEYS = TC.KV_KEYS
+    _AXES = TC.CACHE_BATCH_AXES
+    _LENGTH_AXES = TC.LENGTH_AXES
+    _QUANT_FIELDS = TC.QUANT_FIELDS
 
     @property
     def mode(self) -> str:
         return self.cfg.attention_mode
 
-    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
-        return DecodeState.from_cache(cache, TC.KV_KEYS, TC.CACHE_BATCH_AXES)
-
     def init_state(self, slots: int, max_len: int) -> DecodeState:
-        return self._wrap(
-            TC.init_tconst_cache(self.cfg, slots, max_len, self.mode))
+        return self._wrap_new(
+            TC.init_tconst_cache(self.cfg, slots, max_len, self.mode),
+            max_len)
 
     def prefill(self, params, batch, max_len):
         logits, cache = TC.prefill(params, batch["tokens"], self.cfg,
                                    max_len, mode=self.mode)
-        return logits, self._wrap(cache)
+        self._check_prefill_layout(cache, max_len)
+        return logits, self._wrap_new(cache, max_len)
 
     def prefill_into_slot(self, params, state, slot, tokens, extras=None):
         max_len = state.bookkeeping["tokens"].shape[1]
         logits, row = TC.prefill(params, tokens[None], self.cfg, max_len,
                                  mode=self.mode)
-        return logits[0], state.with_slot(slot, self._wrap(row))
+        return logits[0], state.with_slot(slot, self._row_state(row))
 
     def raw_step(self, params, state, token):
         logits, cache = TC.decode_step(params, state.merged(), token,
                                        self.cfg, mode=self.mode)
-        return logits, self._wrap(cache)
+        return logits, self._rewrap(state, cache)
 
-    def needs_sync(self, state):
-        return TC.needs_resync(state.merged(), self.cfg)
+    def sync_mask(self, state):
+        return TC.pending_resync_rows(state.merged(), self.cfg)
 
-    def sync(self, params, state):
+    def sync_rows(self, params, state, rows):
+        cache = TC.resync_rows_compacted(params, state.merged(), self.cfg,
+                                         rows, self.mode)
+        return self._rewrap(state, cache)
+
+    def step(self, params, state, token):
+        # fused sync + hit step on ONE dense view, so non-dense layouts
+        # pay a single unpack/pack round-trip per scanned step
         cache = state.merged()
-        rows = TC.needs_resync(cache, self.cfg)
-        return self._wrap(
-            TC.resync_rows(params, cache, self.cfg, rows, self.mode))
-
-    def maybe_sync(self, params, state):
-        return self._wrap(
-            TC.maybe_resync(params, state.merged(), self.cfg, self.mode))
+        rows = TC.pending_resync_rows(cache, self.cfg)
+        cache = TC.resync_rows_compacted(params, cache, self.cfg, rows,
+                                         self.mode)
+        logits, cache = TC.decode_step(params, cache, token, self.cfg,
+                                       mode=self.mode)
+        return logits, self._rewrap(state, cache)
 
 
 @dataclasses.dataclass(frozen=True)
 class DenseDecode(DecodeAPI):
     """Decoder-only LM family (dense / moe / ssm / hybrid / vlm): a
     conventional growing KV cache (or O(1) recurrent state for ssm),
-    no periodic sync."""
+    no periodic sync.  The max_len-axis K/V buffers support the paged
+    and int8 layouts."""
 
     cfg: ModelConfig
+    layout: LT.LayoutSpec = LT.DENSE_SPEC
 
-    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
-        return DecodeState.from_cache(cache, LM.KV_KEYS, LM.CACHE_BATCH_AXES)
+    _KV_KEYS = LM.KV_KEYS
+    _AXES = LM.CACHE_BATCH_AXES
+    _LENGTH_AXES = LM.LENGTH_AXES
+    _QUANT_FIELDS = LM.QUANT_FIELDS
 
     def init_state(self, slots: int, max_len: int) -> DecodeState:
-        return self._wrap(LM.init_kv_cache(self.cfg, slots, max_len))
+        return self._wrap_new(LM.init_kv_cache(self.cfg, slots, max_len),
+                              max_len)
 
     def _max_len(self, state: DecodeState, fallback: int) -> int:
+        shapes = state.dense_shapes()
         for key in ("k", "dense_k"):
-            if key in state.kv:
-                return state.kv[key].shape[2]
+            if key in shapes:
+                return shapes[key].shape[2]
         return fallback                      # pure ssm: no positional buffer
 
     def prefill(self, params, batch, max_len):
@@ -327,7 +476,8 @@ class DenseDecode(DecodeAPI):
             params, batch["tokens"], self.cfg, max_len,
             vision_embeds=batch.get("vision_embeds"),
             vision_mask=batch.get("vision_mask"))
-        return logits, self._wrap(cache)
+        self._check_prefill_layout(cache, max_len)
+        return logits, self._wrap_new(cache, max_len)
 
     def prefill_into_slot(self, params, state, slot, tokens, extras=None):
         extras = extras or {}
@@ -338,12 +488,12 @@ class DenseDecode(DecodeAPI):
             extras["vision_embeds"][None],
             vision_mask=None if "vision_mask" not in extras else
             extras["vision_mask"][None])
-        return logits[0], state.with_slot(slot, self._wrap(cache))
+        return logits[0], state.with_slot(slot, self._row_state(cache))
 
     def raw_step(self, params, state, token):
         logits, cache = LM.lm_decode_step(params, state.merged(), token,
                                           self.cfg)
-        return logits, self._wrap(cache)
+        return logits, self._rewrap(state, cache)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -352,42 +502,50 @@ class EncDecDecode(DecodeAPI):
     the per-layer cross K/V cache at admission."""
 
     cfg: ModelConfig
+    layout: LT.LayoutSpec = LT.DENSE_SPEC
 
-    def _wrap(self, cache: Dict[str, Any]) -> DecodeState:
-        return DecodeState.from_cache(cache, ED.KV_KEYS, ED.CACHE_BATCH_AXES)
+    _KV_KEYS = ED.KV_KEYS
+    _AXES = ED.CACHE_BATCH_AXES
+    _LENGTH_AXES = ED.LENGTH_AXES
+    _QUANT_FIELDS = ED.QUANT_FIELDS
 
     def init_state(self, slots: int, max_len: int) -> DecodeState:
-        return self._wrap(ED.init_encdec_cache(self.cfg, slots, max_len))
+        return self._wrap_new(ED.init_encdec_cache(self.cfg, slots, max_len),
+                              max_len)
 
     def prefill(self, params, batch, max_len):
         logits, cache = ED.encdec_prefill(params, batch["tokens"],
                                           batch["audio_feats"], self.cfg,
                                           max_len)
-        return logits, self._wrap(cache)
+        self._check_prefill_layout(cache, max_len)
+        return logits, self._wrap_new(cache, max_len)
 
     def prefill_into_slot(self, params, state, slot, tokens, extras=None):
         if not extras or "audio_feats" not in extras:
             raise ValueError(
                 "encoder-decoder sessions need extras={'audio_feats': "
                 "(T_enc, frontend_dim)} at submission")
-        max_len = state.kv["k"].shape[2]
+        max_len = state.dense_shapes()["k"].shape[2]
         logits, cache = ED.encdec_prefill(
             params, tokens[None], extras["audio_feats"][None], self.cfg,
             max_len)
-        return logits[0], state.with_slot(slot, self._wrap(cache))
+        return logits[0], state.with_slot(slot, self._row_state(cache))
 
     def raw_step(self, params, state, token):
         logits, cache = ED.encdec_decode_step(params, state.merged(), token,
                                               self.cfg)
-        return logits, self._wrap(cache)
+        return logits, self._rewrap(state, cache)
 
 
-def build_decode(cfg: ModelConfig) -> DecodeAPI:
+def build_decode(cfg: ModelConfig, layout: Any = None) -> DecodeAPI:
+    """Build the decode protocol for ``cfg`` with a cache layout chosen
+    by ``layout`` ("dense" | "paged" | "int8" | LayoutSpec | None)."""
+    spec = LT.as_spec(layout)
     if _is_tconst(cfg):
-        return TConstDecode(cfg)
+        return TConstDecode(cfg, spec)
     if cfg.is_encdec:
-        return EncDecDecode(cfg)
-    return DenseDecode(cfg)
+        return EncDecDecode(cfg, spec)
+    return DenseDecode(cfg, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -455,13 +613,14 @@ class ModelAPI:
         if _is_tconst(cfg):
             cache = TC.resync(params, state.merged(), cfg,
                               mode=cfg.attention_mode)
-            return DecodeState.from_cache(cache, TC.KV_KEYS,
-                                          TC.CACHE_BATCH_AXES)
+            return DecodeState.from_dense(
+                cache, TC.KV_KEYS, TC.CACHE_BATCH_AXES, state.layout,
+                layout_bk=state.layout_bookkeeping())
         return state
 
     def needs_resync(self, state: DecodeState) -> jax.Array:
         if _is_tconst(self.cfg):
-            return self.decode.needs_sync(state)
+            return self.decode.sync_mask(state)
         return jnp.zeros((), bool)
 
     # -- dry-run specs -----------------------------------------------------------

@@ -169,7 +169,14 @@ def encdec_forward(params: Params, tokens: jax.Array, audio_feats: jax.Array,
 # Cache partition for the serving layer (repro.models.api.DecodeState):
 # true KV cache vs bookkeeping, and the batch ("slot") axis of each entry.
 KV_KEYS = ("k", "v", "cross_k", "cross_v")
-CACHE_BATCH_AXES = {"len": 0, "k": 1, "v": 1, "cross_k": 1, "cross_v": 1}
+CACHE_BATCH_AXES = {"len": 0, "done": 0, "k": 1, "v": 1,
+                    "cross_k": 1, "cross_v": 1}
+
+# Cache-layout metadata (repro.models.layouts): the decoder self-attention
+# KV grows with max_len (paged); the cross K/V is fixed encoder_seq and
+# stays dense.  All four are quantizable.
+LENGTH_AXES = {"k": 2, "v": 2}
+QUANT_FIELDS = KV_KEYS
 
 
 def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int
@@ -179,6 +186,7 @@ def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int
     n = cfg.n_layers
     return {
         "len": jnp.zeros((batch,), jnp.int32),
+        "done": jnp.zeros((batch,), bool),
         "k": jnp.zeros((n, batch, max_len, kv, hd), dt),
         "v": jnp.zeros((n, batch, max_len, kv, hd), dt),
         "cross_k": jnp.zeros((n, batch, cfg.encoder_seq, kv, hd), dt),

@@ -1,0 +1,359 @@
+"""Pluggable physical cache layouts behind :class:`repro.models.api.DecodeState`.
+
+The decode kernels (``core/tconst.py``, ``models/lm.py``, ``models/encdec.py``)
+consume a *logical* dense cache — a dict of fixed-shape arrays with a batch
+("slot") axis.  A :class:`CacheLayout` decides how those arrays are
+*physically* stored inside ``DecodeState.kv`` and translates between the two:
+
+* :class:`DenseLayout`    — physical == logical (PR-1 behaviour).
+* :class:`PagedLayout`    — every length-axis KV buffer is split into
+  fixed-size pages living in one shared pool per field, with a per-slot
+  page table in bookkeeping.  The pool can be sized *below*
+  ``slots * pages_per_slot`` (short sessions stop paying ``max_len``
+  bytes); page assignment is host-side slot surgery in the scheduler —
+  admission/eviction touch the page map, never full rows.  Token ids and
+  phase counters are bookkeeping and stay dense.
+* :class:`QuantizedLayout` — int8 KV with per-vector (last-axis) float32
+  scales, dequantized on the fly when the decode kernels read the state.
+  Symmetric round-to-nearest; requantizing an unchanged entry is
+  idempotent, so no drift accumulates across decode steps.
+
+All layouts are frozen (hashable) dataclasses: they ride in the
+``DecodeState`` pytree **aux data**, so jitted functions specialise on the
+layout exactly like they specialise on shapes.
+
+Layout methods take the *dense field axes* map (the model's
+``CACHE_BATCH_AXES``) and derive physical axes themselves; layout-owned
+bookkeeping fields carry the ``layout__`` prefix so the model-facing dense
+view (``DecodeState.merged``) can filter them out.
+
+Note on fidelity: paged unpack gathers pages into the dense logical view
+before the kernels run (and pack scatters back), so paging here buys the
+*memory footprint* and the admission/eviction surgery of a paged server,
+not in-kernel page-table walks — a production port would fuse the gather
+into the attention kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import where_rows
+
+LAYOUT_BK_PREFIX = "layout__"
+PAGE_TABLE = LAYOUT_BK_PREFIX + "page_table"
+
+
+# ---------------------------------------------------------------------------
+# Spec (user-facing knob) and binding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    """User-facing layout choice, before shapes are known.
+
+    kind: "dense" | "paged" | "int8".
+    page_size: tokens per page (paged).
+    pool_pages: total pages in the shared pool (paged); None = full
+    ``slots * pages_per_slot`` (no saving, but no allocator needed —
+    required for the uniform-batch ``prefill`` path).  A smaller pool
+    needs the scheduler's page allocator.
+    """
+
+    kind: str = "dense"
+    page_size: int = 64
+    pool_pages: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "paged", "int8"):
+            raise ValueError(f"unknown cache layout kind: {self.kind!r}")
+        if self.page_size < 1:
+            raise ValueError("page_size must be positive")
+        if self.pool_pages is not None and self.pool_pages < 1:
+            raise ValueError("pool_pages must be positive (or None for "
+                             "the full slots * pages_per_slot pool)")
+
+
+DENSE_SPEC = LayoutSpec()
+
+
+def as_spec(layout) -> LayoutSpec:
+    if layout is None:
+        return DENSE_SPEC
+    if isinstance(layout, LayoutSpec):
+        return layout
+    if isinstance(layout, str):
+        return LayoutSpec(kind=layout)
+    raise TypeError(f"layout must be LayoutSpec | str | None, got {layout!r}")
+
+
+def bind_layout(spec: LayoutSpec, *, slots: int, max_len: int,
+                length_axes: Dict[str, int], quant_fields: Tuple[str, ...],
+                dtype: str) -> "CacheLayout":
+    """Turn a shape-free spec into a bound (hashable) layout instance."""
+    spec = as_spec(spec)
+    if spec.kind == "dense":
+        return DenseLayout()
+    if spec.kind == "int8":
+        return QuantizedLayout(fields=tuple(sorted(quant_fields)),
+                               dtype=dtype)
+    pps = -(-max_len // spec.page_size)
+    pool = slots * pps if spec.pool_pages is None else spec.pool_pages
+    return PagedLayout(page=spec.page_size, pool_pages=pool, max_len=max_len,
+                       slots=slots,
+                       fields=tuple(sorted(length_axes.items())))
+
+
+# ---------------------------------------------------------------------------
+# Dense (base: generic pack-through + per-field slot surgery)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseLayout:
+    """Physical == logical.  Also the base class providing the generic
+    per-field slot surgery used by the other layouts' pass-through
+    fields."""
+
+    name = "dense"
+
+    # -- logical <-> physical ----------------------------------------------
+    def pack(self, dense: Dict[str, Any], bk: Dict[str, Any],
+             axes: Dict[str, int]) -> Dict[str, Any]:
+        return dict(dense)
+
+    def unpack(self, kv: Dict[str, Any], bk: Dict[str, Any],
+               axes: Dict[str, int]) -> Dict[str, Any]:
+        return dict(kv)
+
+    # -- layout-owned bookkeeping ------------------------------------------
+    def init_bookkeeping(self, slots: int) -> Dict[str, Any]:
+        return {}
+
+    def bookkeeping_axes(self) -> Dict[str, int]:
+        return {}
+
+    # -- slot surgery on the PHYSICAL representation -----------------------
+    def _axis(self, field: str, axes: Dict[str, int]) -> int:
+        return axes[field]
+
+    def where_rows(self, rows: jax.Array, new_kv: Dict[str, Any],
+                   old_kv: Dict[str, Any], bk: Dict[str, Any],
+                   axes: Dict[str, int]) -> Dict[str, Any]:
+        return {f: where_rows(rows, new_kv[f], old_kv[f],
+                              self._axis(f, axes)) for f in new_kv}
+
+    def write_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
+                   slot: jax.Array, dense_row: Dict[str, Any],
+                   axes: Dict[str, int]) -> Dict[str, Any]:
+        """Scatter a 1-slot dense row into physical slot ``slot``."""
+        packed = self.pack(dense_row, bk, axes)
+        out = {}
+        for f, dst in kv.items():
+            src = packed[f].astype(dst.dtype)
+            out[f] = jax.lax.dynamic_update_slice_in_dim(
+                dst, src, slot, axis=self._axis(f, axes))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# int8 with per-vector scales
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector (last axis) int8 quantization."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLayout(DenseLayout):
+    """int8 KV + float32 per-vector scales (``f`` -> ``f__q``/``f__scale``).
+
+    KV bytes shrink ~4x vs float32 (1 byte per element + 4/head_dim
+    scale overhead); decode kernels read the dequantized dense view, so
+    accuracy is within the symmetric-int8 rounding error (~0.4% of each
+    vector's max magnitude per element — the documented tolerance).
+    """
+
+    fields: Tuple[str, ...] = ()
+    dtype: str = "float32"
+    name = "int8"
+
+    def pack(self, dense, bk, axes):
+        out = {}
+        for f, v in dense.items():
+            if f in self.fields:
+                out[f + "__q"], out[f + "__scale"] = quantize_int8(v)
+            else:
+                out[f] = v
+        return out
+
+    def unpack(self, kv, bk, axes):
+        out = {}
+        for f, v in kv.items():
+            if f.endswith("__q"):
+                base = f[:-3]
+                out[base] = dequantize_int8(v, kv[base + "__scale"],
+                                            jnp.dtype(self.dtype))
+            elif not f.endswith("__scale"):
+                out[f] = v
+        return out
+
+    def _axis(self, field, axes):
+        for suffix in ("__q", "__scale"):
+            if field.endswith(suffix):
+                return axes[field[: -len(suffix)]]
+        return axes[field]
+
+
+# ---------------------------------------------------------------------------
+# Paged
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout(DenseLayout):
+    """Length-axis KV buffers as fixed-size pages in a shared pool.
+
+    For every paged field the dense (..., B, max_len, ...) buffer becomes
+    a physical (..., pool_pages + 1, page, ...) pool — the extra page is
+    TRASH: unassigned page-table entries point at it, so packs of
+    unallocated regions land there and unpacks of them read garbage that
+    the kernels' validity masks never touch.  One int32 page table
+    ``layout__page_table`` (slots, pages_per_slot) in bookkeeping is
+    shared by all paged fields.
+
+    Constraint (asserted): a paged field's batch axis must immediately
+    precede its length axis, so page gather/scatter is a single take /
+    indexed set.
+
+    Fields absent from the cache (e.g. ``hist_k`` in pure-tconst mode)
+    are skipped, making the layout a no-op for caches that are already
+    O(1).
+    """
+
+    page: int = 64
+    pool_pages: int = 0
+    max_len: int = 0
+    slots: int = 0
+    fields: Tuple[Tuple[str, int], ...] = ()
+    name = "paged"
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_len // self.page)
+
+    @property
+    def trash(self) -> int:
+        return self.pool_pages
+
+    @property
+    def preallocated(self) -> bool:
+        """Full pool: identity page table works with no allocator."""
+        return self.pool_pages >= self.slots * self.pages_per_slot
+
+    def _length_axis(self, field: str) -> Optional[int]:
+        for f, la in self.fields:
+            if f == field:
+                return la
+        return None
+
+    # -- bookkeeping --------------------------------------------------------
+    def init_bookkeeping(self, slots):
+        pps = self.pages_per_slot
+        if self.preallocated:
+            pt = jnp.arange(slots * pps, dtype=jnp.int32).reshape(slots, pps)
+        else:
+            pt = jnp.full((slots, pps), self.trash, jnp.int32)
+        return {PAGE_TABLE: pt}
+
+    def bookkeeping_axes(self):
+        return {PAGE_TABLE: 0}
+
+    # -- paging primitives --------------------------------------------------
+    def _to_pages(self, x: jax.Array, la: int) -> jax.Array:
+        """(..., B, L, rest) -> (..., B, pps, page, rest)."""
+        pps = self.pages_per_slot
+        pad = pps * self.page - x.shape[la]
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[la] = (0, pad)
+            x = jnp.pad(x, widths)
+        return x.reshape(x.shape[:la] + (pps, self.page) + x.shape[la + 1:])
+
+    def pack(self, dense, bk, axes):
+        pt = bk[PAGE_TABLE]
+        out = {}
+        for f, v in dense.items():
+            la = self._length_axis(f)
+            if la is None:
+                out[f] = v
+                continue
+            assert axes[f] == la - 1, (f, axes[f], la)
+            pages = self._to_pages(v, la)          # (..., B, pps, page, rest)
+            pool_shape = (v.shape[:la - 1] + (self.pool_pages + 1, self.page)
+                          + v.shape[la + 1:])
+            idx = (slice(None),) * (la - 1) + (pt,)
+            out[f] = jnp.zeros(pool_shape, v.dtype).at[idx].set(pages)
+        return out
+
+    def unpack(self, kv, bk, axes):
+        pt = bk[PAGE_TABLE]
+        out = {}
+        for f, v in kv.items():
+            la = self._length_axis(f)
+            if la is None:
+                out[f] = v
+                continue
+            gathered = jnp.take(v, pt, axis=la - 1)  # (..., B, pps, page, rest)
+            merged = gathered.reshape(
+                gathered.shape[:la] + (-1,) + gathered.shape[la + 2:])
+            out[f] = jax.lax.slice_in_dim(merged, 0, self.max_len, axis=la)
+        return out
+
+    # -- slot surgery -------------------------------------------------------
+    def where_rows(self, rows, new_kv, old_kv, bk, axes):
+        pt = bk[PAGE_TABLE]
+        # slot mask -> page mask over the pool (real pages are uniquely
+        # owned; the trash page's pick is arbitrary and its content dead)
+        page_rows = jnp.zeros((self.pool_pages + 1,), bool).at[pt].set(
+            jnp.broadcast_to(rows[:, None], pt.shape))
+        out = {}
+        for f in new_kv:
+            la = self._length_axis(f)
+            if la is None:
+                out[f] = where_rows(rows, new_kv[f], old_kv[f], axes[f])
+            else:
+                out[f] = where_rows(page_rows, new_kv[f], old_kv[f], la - 1)
+        return out
+
+    def write_slot(self, kv, bk, slot, dense_row, axes):
+        """Page-map surgery: only the slot's own pages are touched."""
+        pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)      # (pps,)
+        out = {}
+        for f, dst in kv.items():
+            la = self._length_axis(f)
+            src = dense_row[f].astype(dst.dtype)
+            if la is None:
+                out[f] = jax.lax.dynamic_update_slice_in_dim(
+                    dst, src, slot, axis=axes[f])
+                continue
+            pages = self._to_pages(src, la)       # (..., 1, pps, page, rest)
+            pages = jax.lax.index_in_dim(pages, 0, axis=la - 1,
+                                         keepdims=False)
+            idx = (slice(None),) * (la - 1) + (pt_row,)
+            out[f] = dst.at[idx].set(pages)
+        return out

@@ -249,9 +249,16 @@ def _remat_group(n: int) -> int:
 # batch ("slot") axis of every entry.
 KV_KEYS = ("k", "v", "dense_k", "dense_v", "ssm", "conv")
 CACHE_BATCH_AXES = {
-    "len": 0, "k": 1, "v": 1, "dense_k": 1, "dense_v": 1,
+    "len": 0, "done": 0, "k": 1, "v": 1, "dense_k": 1, "dense_v": 1,
     "ssm": 1, "conv": 1,
 }
+
+# Cache-layout metadata (repro.models.layouts): the growing max_len-axis
+# KV buffers a PagedLayout pages, and the float KV a QuantizedLayout may
+# store as int8 (the ssm recurrent state is mutated every step, so
+# requantizing it would accumulate error — it stays dense).
+LENGTH_AXES = {"k": 2, "v": 2, "dense_k": 2, "dense_v": 2}
+QUANT_FIELDS = ("k", "v", "dense_k", "dense_v")
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int
@@ -260,7 +267,8 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int
     n_scan = cfg.n_layers - n_dense
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     dt = jnp.dtype(cfg.dtype)
-    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32),
+                             "done": jnp.zeros((batch,), bool)}
     if cfg.arch_type != "ssm":
         cache["k"] = jnp.zeros((n_scan, batch, max_len, kv, hd), dt)
         cache["v"] = jnp.zeros((n_scan, batch, max_len, kv, hd), dt)

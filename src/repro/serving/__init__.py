@@ -1,3 +1,4 @@
+from repro.models.layouts import LayoutSpec  # noqa: F401
 from repro.serving import engine  # noqa: F401
 from repro.serving.engine import Engine, StepStats  # noqa: F401
 from repro.serving.scheduler import SlotScheduler  # noqa: F401

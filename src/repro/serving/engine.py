@@ -3,13 +3,19 @@
 The serving stack has three layers:
 
 * ``repro.models.api.DecodeAPI`` — the per-model decode protocol.  Its
-  ``step`` fuses the TConst W_og-boundary resync ON DEVICE (``lax.cond``
-  on per-slot phase counters), and ``decode_chunk`` scans it so a chunk
-  of k tokens is ONE dispatch with zero per-token host round-trips.
+  ``step`` fuses the TConst W_og-boundary resync ON DEVICE through the
+  compacted row-wise ``sync_rows`` (boundary rows are gathered, synced
+  at batch size 1 and scattered back — non-boundary rows are never
+  computed), and ``decode_chunk`` scans it so a chunk of k tokens is
+  ONE dispatch with zero per-token host round-trips.  The physical
+  cache representation is a pluggable ``repro.models.layouts`` backend:
+  dense, paged (page pool + per-slot page table) or int8 (+ per-vector
+  scales).
 * ``repro.serving.scheduler.SlotScheduler`` + ``repro.serving.session``
   — continuous batching: per-request sessions with their own prompt
-  lengths / sampling params / streaming callbacks, admitted and evicted
-  mid-flight into a fixed-shape slotted batch.
+  lengths / sampling params / EOS ids / streaming callbacks, admitted
+  and evicted mid-flight into a fixed-shape slotted batch (paged
+  layout: admission/eviction is page-map surgery).
 * :class:`Engine` (this module) — the thin uniform-batch wrapper kept
   for benchmarks and examples: same-length prompts in, ``(B, n)`` ids
   out.  ``generate(record_stats=False)`` uses the chunked zero-sync
@@ -19,21 +25,22 @@ The serving stack has three layers:
   then ONE linear-time miss) for the Fig 8 latency split.
 
 Cache accounting (``cache_bytes``) reads the ``DecodeState`` kv /
-bookkeeping partition — the id buffer and counters are excluded by
-construction, not by name-matching.
+bookkeeping partition in its PHYSICAL layout — paged pools and int8
+scales report their true bytes, and the id buffer and counters are
+excluded by construction, not by name-matching.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import ModelAPI, decode_chunk
+from repro.models.api import ModelAPI, build_decode, decode_chunk
 
 
 @dataclasses.dataclass
@@ -45,9 +52,10 @@ class StepStats:
 
 class Engine:
     def __init__(self, api: ModelAPI, params: Any, max_len: int,
-                 sample_temperature: float = 0.0, seed: int = 0):
+                 sample_temperature: float = 0.0, seed: int = 0,
+                 layout: Optional[Any] = None):
         self.api = api
-        self.decode = api.decode
+        self.decode = build_decode(api.cfg, layout)
         self.params = params
         self.max_len = max_len
         self.temperature = sample_temperature
@@ -55,8 +63,8 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, b: self.decode.prefill(p, b, max_len))
         self._step = jax.jit(self.decode.raw_step)     # hit (no sync check)
-        self._sync = jax.jit(self.decode.sync)         # miss
-        self._needs = jax.jit(self.decode.needs_sync)
+        self._mask = jax.jit(self.decode.sync_mask)
+        self._sync = jax.jit(self.decode.maybe_sync)   # miss (compacted)
         self._chunk = jax.jit(
             functools.partial(decode_chunk, self.decode),
             static_argnames=("n_steps",))
@@ -86,7 +94,7 @@ class Engine:
 
     def _generate_chunked(self, state, token, n_tokens: int) -> np.ndarray:
         """Fast path: the remaining n_tokens - 1 steps run as ONE jitted
-        lax.scan — resync fires via lax.cond inside the scanned step, so
+        lax.scan — the compacted resync fires inside the scanned step, so
         there are zero per-token host syncs."""
         B = token.shape[0]
         temps = jnp.full((B,), self.temperature, jnp.float32)
@@ -103,7 +111,7 @@ class Engine:
         so each hit/miss is timed separately (paper Fig 8)."""
         out = [token]
         for _ in range(n_tokens - 1):
-            if bool(np.asarray(self._needs(state)).any()):
+            if bool(np.asarray(self._mask(state)).any()):
                 t0 = time.perf_counter()
                 state = jax.block_until_ready(
                     self._sync(self.params, state))
@@ -139,8 +147,9 @@ class Engine:
 
     # ------------------------------------------------------------------
     def cache_bytes(self, batch_size: int) -> int:
-        """KV-cache footprint at max_len (paper Fig 8g), from the
-        DecodeState kv/bookkeeping partition (no allocation)."""
+        """KV-cache footprint at max_len (paper Fig 8g) in the engine's
+        physical layout, from the DecodeState kv/bookkeeping partition
+        (no allocation)."""
         state = jax.eval_shape(
             lambda: self.decode.init_state(batch_size, self.max_len))
         return state.kv_bytes()

@@ -5,18 +5,27 @@ The scheduler owns one fixed-shape multi-slot ``DecodeState`` and admits
 
 * **admit** — a free slot is filled by ``prefill_into_slot``: the
   session's prompt (its own length; compiled once per distinct length)
-  is prefilled as a single row and scattered into the batched state.
-  Running slots are untouched, so a new request joins a half-decoded
-  batch without disturbing it.
+  is prefilled as a single dense row and scattered into the batched
+  state.  Running slots are untouched, so a new request joins a
+  half-decoded batch without disturbing it.  Under a **paged** cache
+  layout the scheduler is also the page allocator: admission assigns
+  just enough pool pages to cover the session's prompt + budget (the
+  page table is host-side slot surgery), and a session whose pages
+  aren't available yet simply waits in the queue — so a pool sized
+  well below ``slots * max_len`` serves short sessions at a fraction
+  of the dense footprint.
 * **decode** — all slots advance together in chunks of ``chunk_size``
   tokens.  A chunk is ONE jitted ``lax.scan`` over the fused step: the
-  TConst W_og resync fires on device via ``lax.cond`` on the per-slot
-  phase counters, so a chunk performs zero per-token host round-trips
-  (one device->host transfer per chunk, for the sampled ids).  Slots
-  admitted at different times sit at different resync phases; the
-  row-selective sync keeps every slot token-identical to a solo run.
-* **retire** — a session that exhausts its budget frees its slot (the
-  slot is cleared so stale phase counters cannot re-trigger syncs).
+  TConst W_og resync fires on device through the compacted row-wise
+  ``sync_rows`` (each boundary row synced at batch size 1 — slots do
+  not pay for each other's misses), so a chunk performs zero per-token
+  host round-trips (one device->host transfer per chunk, for the
+  sampled ids).  A slot that samples its session's EOS id sets the
+  on-device ``done`` flag and is frozen for the rest of the chunk.
+* **retire** — a session that exhausts its budget or hits EOS frees its
+  slot at the chunk boundary (the slot is cleared so stale phase
+  counters cannot re-trigger syncs; paged: its pages return to the
+  free pool).
 
 Chunk timings are recorded as ``StepStats(kind="chunk")`` entries; the
 first entry includes the one-time jit compile of the chunked scan, so
@@ -25,6 +34,7 @@ aggregate with a median (or drop it) when reporting dispatch cost.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import time
 from typing import Any, Deque, List, Optional
@@ -33,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import layouts as LT
 from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
 from repro.serving.session import Session
 
@@ -54,21 +65,47 @@ class SlotScheduler:
         self.chunk_size = chunk_size
 
         self.state = decode.init_state(slots, max_len)
-        self._empty_row = decode.init_state(1, max_len)
+        self.layout = self.state.layout
+        # prefilled rows are always dense; slot scatter goes through the
+        # batched state's layout (paged: page-map surgery)
+        dense_decode = dataclasses.replace(decode, layout=LT.DENSE_SPEC)
+        self._empty_row = dense_decode.init_state(1, max_len)
         self._prefill_slot = jax.jit(decode.prefill_into_slot)
         self._chunk = jax.jit(functools.partial(decode_chunk, decode),
                               static_argnames=("n_steps",))
         self._clear = jax.jit(lambda st, slot, row: st.with_slot(slot, row))
 
+        # paged layout: the scheduler owns page assignment.  Start from an
+        # all-TRASH table (unique real-page ownership is the invariant the
+        # pack/scatter relies on) with every pool page free.  Page
+        # accounting only applies when the cache actually HAS paged
+        # fields — for caches that are already O(1) (pure tconst) the
+        # paged layout stores nothing in pages and admission must not
+        # gate on the pool.
+        self._paged = isinstance(self.layout, LT.PagedLayout) and \
+            any(f in self.state.kv for f, _ in self.layout.fields)
+        self.free_pages: List[int] = []
+        self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        if self._paged:
+            trash = jnp.full((slots, self.layout.pages_per_slot),
+                             self.layout.trash, jnp.int32)
+            self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: trash})
+            self.free_pages = list(range(self.layout.pool_pages))
+
         self.key = jax.random.PRNGKey(seed)
         self.last_token = jnp.zeros((slots,), jnp.int32)
         self.temps = np.zeros((slots,), np.float32)
+        self.eos = np.full((slots,), -1, np.int32)
         self.active = np.zeros((slots,), bool)
         self.sessions: List[Optional[Session]] = [None] * slots
         self.pending: Deque[Session] = collections.deque()
         self.stats: List["StepStats"] = []
 
     # ------------------------------------------------------------------
+    def _pages_needed(self, session: Session) -> int:
+        need = len(session.prompt) + session.max_new_tokens + self.chunk_size
+        return -(-need // self.layout.page)
+
     def submit(self, session: Session) -> Session:
         """Queue a session; it is admitted at the next chunk boundary."""
         # decode writes token ids into the slot's fixed (max_len,) buffer;
@@ -82,6 +119,12 @@ class SlotScheduler:
                 f"session {session.sid}: prompt {len(session.prompt)} + "
                 f"max_new_tokens {session.max_new_tokens} (+ chunk "
                 f"{self.chunk_size}) exceeds max_len {self.max_len}")
+        if self._paged and \
+                self._pages_needed(session) > self.layout.pool_pages:
+            raise ValueError(
+                f"session {session.sid}: needs {self._pages_needed(session)}"
+                f" pages but the paged pool only has "
+                f"{self.layout.pool_pages} — it could never be admitted")
         self.pending.append(session)
         return session
 
@@ -93,11 +136,27 @@ class SlotScheduler:
         return self.state.kv_bytes()
 
     # ------------------------------------------------------------------
+    def _assign_pages(self, slot: int, n_pages: int) -> None:
+        pages = [self.free_pages.pop() for _ in range(n_pages)]
+        self._slot_pages[slot] = pages
+        row = np.full((self.layout.pages_per_slot,), self.layout.trash,
+                      np.int32)
+        row[:n_pages] = pages
+        pt = self.state.bookkeeping[LT.PAGE_TABLE].at[slot].set(
+            jnp.asarray(row))
+        self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
+
     def _admit_pending(self) -> None:
         free = [i for i in range(self.slots) if not self.active[i]]
         while self.pending and free:
+            sess = self.pending[0]
+            if self._paged and \
+                    self._pages_needed(sess) > len(self.free_pages):
+                break                  # wait for running sessions to retire
+            self.pending.popleft()
             slot = free.pop(0)
-            sess = self.pending.popleft()
+            if self._paged:
+                self._assign_pages(slot, self._pages_needed(sess))
             logits, self.state = self._prefill_slot(
                 self.params, self.state, np.int32(slot),
                 jnp.asarray(sess.prompt), extras=sess.extras)
@@ -109,6 +168,7 @@ class SlotScheduler:
             self.sessions[slot] = sess
             self.active[slot] = True
             self.temps[slot] = sess.temperature
+            self.eos[slot] = -1 if sess.eos_id is None else sess.eos_id
             sess.deliver([int(t0)])          # first token: prefill logits
             if sess.done:
                 self._release(slot)
@@ -118,10 +178,21 @@ class SlotScheduler:
         self.sessions[slot] = None
         self.active[slot] = False
         self.temps[slot] = 0.0
+        self.eos[slot] = -1
         # clear the slot so stale phase counters can't keep firing the
-        # on-device resync cond for an empty row
+        # on-device resync for an empty row (paged: zeros are written
+        # through the slot's still-assigned pages)
         self.state = self._clear(self.state, np.int32(slot),
                                  self._empty_row)
+        if self._paged:
+            # recycle from the host-side assignment record — no device
+            # read-back on the eviction path
+            self.free_pages.extend(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            trash_row = jnp.full((self.layout.pages_per_slot,),
+                                 self.layout.trash, jnp.int32)
+            pt = self.state.bookkeeping[LT.PAGE_TABLE].at[slot].set(trash_row)
+            self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
         self.last_token = self.last_token.at[slot].set(0)
 
     # ------------------------------------------------------------------
@@ -136,7 +207,7 @@ class SlotScheduler:
         toks, self.state, self.key = self._chunk(
             self.params, self.state, self.last_token, self.key,
             jnp.asarray(self.temps), jnp.asarray(self.active),
-            n_steps=self.chunk_size)
+            n_steps=self.chunk_size, eos=jnp.asarray(self.eos))
         self.last_token = toks[:, -1]
         host_toks = np.asarray(toks)         # the ONE host sync per chunk
         self.stats.append(StepStats("chunk", time.perf_counter() - t0,

@@ -34,6 +34,11 @@ class Session:
     have different prompt lengths and resync phases).
     max_new_tokens: total tokens to generate, INCLUDING the first token
     sampled from the prefill logits.
+    temperature: sampling temperature (<= 0 means greedy).
+    eos_id: optional end-of-sequence token id — generating it finishes
+    the session early (the EOS itself is delivered).  On device, the
+    slot's ``done`` flag freezes it for the rest of the decode chunk;
+    the scheduler evicts it at the chunk boundary.
     on_token: optional ``f(session, token)`` streaming callback.
     extras: per-request model inputs beyond tokens (e.g. ``audio_feats``
     for the encoder-decoder, ``vision_embeds``/``vision_mask`` for VLMs).
@@ -42,6 +47,7 @@ class Session:
     prompt: np.ndarray
     max_new_tokens: int
     temperature: float = 0.0
+    eos_id: Optional[int] = None
     on_token: Optional[Callable[["Session", int], None]] = None
     extras: Optional[Dict[str, Any]] = None
 
@@ -60,11 +66,15 @@ class Session:
         return self.max_new_tokens - len(self.tokens)
 
     def deliver(self, tokens) -> None:
-        """Append generated tokens (clipped to the budget) and stream
-        them through the callback; marks the session done at budget."""
+        """Append generated tokens (clipped to the budget, truncated at
+        ``eos_id``) and stream them through the callback; marks the
+        session done at budget or EOS."""
         for t in list(tokens)[: self.remaining]:
             self.tokens.append(int(t))
             if self.on_token is not None:
                 self.on_token(self, int(t))
+            if self.eos_id is not None and int(t) == self.eos_id:
+                self.done = True
+                return
         if self.remaining == 0:
             self.done = True
