@@ -1,7 +1,9 @@
 """Paper Fig. 8: inference latency, cache-hit/miss split, KV-cache memory,
 and speedup ratios vs context length N, for Base / TLinFormer /
-TConstFormer at matched (reduced) scale on CPU — plus the DecodeAPI v2
-cache-layout sweep (dense / paged / int8).
+TConstFormer at matched (reduced) scale on CPU — plus the cache-layout
+sweep (dense / paged / int8 / paged_int8) with the per-step HBM bytes
+the LAYOUT-NATIVE kernels touch vs the dense-logical bytes the retired
+per-step ``merged()`` densification used to pay.
 
 Validates the paper's qualitative claims at reduced scale:
   (a-c) hit latency: baseline grows with N, TLin grows (gentler),
@@ -55,32 +57,58 @@ def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
 
 
 def _layout_sweep(api, params, emit) -> Dict:
-    """DecodeAPI v2: cache bytes and chunked throughput per layout, plus
-    the paged-pool saving for a short-session scenario (slots sized for
-    max_len, sessions needing a quarter of it — Fig 8g with layouts)."""
+    """DecodeAPI v3 (layout-native kernels): cache bytes, chunked
+    throughput, and PER-STEP HBM BYTES TOUCHED per layout — the view
+    bytes the layout-native step actually reads (assigned pages + table
+    for paged, int8+scales for quantized) vs the dense-logical bytes the
+    retired per-step ``merged()`` densification used to materialise.
+    Also the paged-pool saving for a short-session scenario (slots sized
+    for max_len, sessions needing a quarter of it — Fig 8g)."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+
     max_len, slots, short = 512, 4, 128
     out: Dict[str, Dict] = {}
-    for kind in ("dense", "paged", "int8"):
+    for kind in ("dense", "paged", "int8", "paged_int8"):
         eng = Engine(api, params, max_len=max_len, layout=kind)
         batch = {"tokens": jnp.ones((1, short), jnp.int32)}
         tps = (GEN - 1) / eng.time_chunked_decode(batch, GEN)
-        full_bytes = eng.cache_bytes(slots)
-        row = {"cache_bytes": full_bytes, "chunk_tps": tps}
-        if kind == "paged":
-            # pool sized for the short sessions actually served
+        row = {"cache_bytes": eng.cache_bytes(slots), "chunk_tps": tps}
+        state = eng.decode.init_state(slots, max_len)
+        row["step_view_bytes"] = state.step_view_bytes()
+        row["step_dense_logical_bytes"] = state.dense_logical_bytes()
+        if kind in ("paged", "paged_int8"):
+            # pool + step bytes when sized for the short sessions actually
+            # served: the scheduler assigns only the pages they need, and
+            # the kernels walk only those
             page = 64
             pool = slots * (-(-short // page))
-            spec = LayoutSpec(kind="paged", page_size=page, pool_pages=pool)
+            spec = LayoutSpec(kind=kind, page_size=page, pool_pages=pool)
             short_eng = Engine(api, params, max_len=max_len, layout=spec)
             row["cache_bytes_short_pool"] = short_eng.cache_bytes(slots)
+            sched = SlotScheduler(build_decode(api.cfg, spec), params,
+                                  slots=slots, max_len=max_len,
+                                  chunk_size=8)
+            sched.submit(Session(np.ones(short - 16, np.int32),
+                                 max_new_tokens=8))
+            sched.step()
+            row["step_view_bytes_short_pool"] = \
+                sched.state.step_view_bytes()
         out[kind] = row
         emit(f"layout/{kind}/cache_bytes", row["cache_bytes"],
              f"{slots} slots @ max_len={max_len}")
         emit(f"layout/{kind}/chunk_tps", tps, "tok/s")
+        emit(f"layout/{kind}/step_view_bytes", row["step_view_bytes"],
+             f"per-step HBM bytes touched; dense-logical="
+             f"{row['step_dense_logical_bytes']}")
     emit("layout/paged/cache_bytes_short_pool",
          out["paged"]["cache_bytes_short_pool"],
          f"pool sized for {short}-token sessions; dense pays "
          f"{out['dense']['cache_bytes']}")
+    emit("layout/paged/step_view_bytes_short_pool",
+         out["paged"]["step_view_bytes_short_pool"],
+         "kernel walks only the assigned pages")
     emit("layout/int8_shrink",
          out["dense"]["cache_bytes"] / out["int8"]["cache_bytes"],
          "x smaller KV (~4x for f32)")

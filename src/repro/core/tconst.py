@@ -45,10 +45,11 @@ from repro.config import ModelConfig
 from repro.layers import attention as A
 from repro.layers import embed as E
 from repro.layers import rope as R
-from repro.layers.common import (Params, init_rmsnorm, rmsnorm, split_keys,
-                                 where_rows)
+from repro.layers.common import (Params, init_rmsnorm, put_rows, rmsnorm,
+                                 split_keys, take_rows, where_rows)
 from repro.layers.mlp import init_swiglu, swiglu
 from repro.layers.moe import init_moe, moe_ffn
+from repro.models import layouts as LT
 
 # ---------------------------------------------------------------------------
 # Parameters
@@ -432,46 +433,94 @@ def pending_resync_rows(cache: Dict[str, Any], cfg: ModelConfig
                         ) -> jax.Array:
     """(B,) bool: rows that must sync before the next step — the window
     is full AND the slot is not EOS-finished (done rows are frozen by
-    the chunk, so syncing them would be wasted O(N) work every step)."""
+    the chunk, so syncing them would be wasted O(N) work every step).
+    Reads ONLY bookkeeping counters — no KV access, no unpack."""
     return jnp.logical_and(needs_resync(cache, cfg),
                            jnp.logical_not(cache["done"]))
+
+
+# -- batched compacted resync (one dispatch for all pending rows) -----------
+
+# resync() rebuilds the ctx/hist KV entirely from the raw token buffer, so
+# a row-wise resync only ever needs to GATHER these bookkeeping fields —
+# never the KV cache itself.
+RESYNC_INPUT_KEYS = ("tokens", "hist_len", "gen_len")
+
+
+def resync_buckets(batch: int) -> Tuple[int, ...]:
+    """Static gather sizes for the compacted resync: 0, powers of two,
+    and the full batch.  The pending count is rounded UP to the nearest
+    bucket, so at most 2x the pending rows are computed while the number
+    of compiled resync variants stays O(log batch)."""
+    sizes = {0, batch}
+    k = 1
+    while k < batch:
+        sizes.add(k)
+        k *= 2
+    return tuple(sorted(sizes))
+
+
+def compacted_rows_switch(rows: jax.Array, operand: Any, branch_factory):
+    """Shared scaffold of the batched compacted resync: sort pending
+    rows first, round their count up to a static bucket, and dispatch
+    ONE ``lax.switch`` branch.  ``branch_factory(k)`` returns
+    ``fn(operand, idx (k,), sel (k,) bool) -> operand`` — ``idx`` are
+    the rows to gather (pending first, then padding) and ``sel`` masks
+    the padding rows out of the scatter.  Used by the dense-dict oracle
+    (:func:`resync_rows_compacted`) and the layout-aware
+    ``TConstDecode.sync_rows`` so the bucketing policy lives in exactly
+    one place.  Zero pending rows selects the identity branch."""
+    buckets = resync_buckets(rows.shape[0])
+    order = jnp.argsort(jnp.logical_not(rows))       # pending rows first
+    count = jnp.sum(rows)
+
+    def wrap(kb: int):
+        if kb == 0:
+            return lambda op: op
+        branch = branch_factory(kb)
+        return lambda op: branch(op, order[:kb], jnp.arange(kb) < count)
+
+    index = jnp.searchsorted(jnp.asarray(buckets), count)
+    return jax.lax.switch(index, [wrap(k) for k in buckets], operand)
 
 
 def resync_rows_compacted(params: Params, cache: Dict[str, Any],
                           cfg: ModelConfig, rows: jax.Array,
                           mode: str = "tconst") -> Dict[str, Any]:
-    """Compacted row-wise resync: a ``lax.while_loop`` that gathers ONE
-    boundary row at a time, runs its O(N) synchronisation at batch size
-    1, and scatters it back — non-boundary rows are never computed.
+    """Compacted row-wise resync, BATCHED: gather all pending rows in ONE
+    dispatch, run ONE O(N) synchronisation at (bucketed) batch size k,
+    and scatter the results back — non-pending rows are never computed
+    and come through bit-identical.
 
-    With S staggered slots this replaces PR-1's up-to-S full-batch O(N)
-    misses per W_og window with S single-row misses, restoring the
-    paper's amortized O(1) per slot under continuous batching.  Zero
-    pending rows means zero loop iterations, so this IS the fused
+    This replaces the PR-2 ``lax.while_loop`` that serialized one
+    batch-1 resync per pending row (the ROADMAP follow-up: a PARTIALLY
+    synchronized batch paid latency linear in its pending count).  The
+    pending count is dynamic, so the gather size is rounded up to a
+    static bucket (0, 1, 2, 4, ..., B — ``lax.switch`` on the count);
+    padding rows are non-pending rows whose results are masked out of
+    the scatter, wasting at most 2x the pending compute while keeping
+    the dispatch count at exactly one.  Because ``resync`` rebuilds the
+    ctx/hist KV from the raw token ids, only the ``RESYNC_INPUT_KEYS``
+    bookkeeping rows are gathered — the KV cache is written, never read.
+
+    Zero pending rows selects the identity branch, so this IS the fused
     on-device decision — no outer ``lax.cond`` needed.
-
-    When EVERY row is pending (the uniform-batch path: all slots share
-    one phase) the loop would serialize B batch-1 resyncs where one
-    batched resync does the same work in parallel, so that case routes
-    to the full-batch :func:`resync` instead; partially-synchronized
-    batches still serialize their pending subset (noted in ROADMAP).
     """
-    def compacted(cache):
-        def cond(carry):
-            return jnp.any(carry[1])
+    def factory(kb: int):
+        def branch(cache, idx, sel):
+            row_in = {f: take_rows(cache[f], idx, CACHE_BATCH_AXES[f])
+                      for f in RESYNC_INPUT_KEYS}
+            new = resync(params, row_in, cfg, mode)
+            out = dict(cache)
+            for f, v in new.items():
+                ax = CACHE_BATCH_AXES[f]
+                old = take_rows(cache[f], idx, ax)
+                vals = where_rows(sel, v.astype(cache[f].dtype), old, ax)
+                out[f] = put_rows(cache[f], idx, vals, ax)
+            return out
+        return branch
 
-        def body(carry):
-            cache, pending = carry
-            i = jnp.argmax(pending).astype(jnp.int32)
-            row = resync(params, gather_row(cache, i), cfg, mode)
-            return scatter_row(cache, i, row), pending.at[i].set(False)
-
-        cache, _ = jax.lax.while_loop(cond, body, (cache, rows))
-        return cache
-
-    return jax.lax.cond(jnp.all(rows),
-                        lambda c: resync(params, c, cfg, mode),
-                        compacted, cache)
+    return compacted_rows_switch(rows, cache, factory)
 
 
 def resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,
@@ -523,15 +572,20 @@ def resync(params: Params, cache: Dict[str, Any], cfg: ModelConfig,
     return cache
 
 
-def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
-                cfg: ModelConfig, mode: str = "tconst"
-                ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Cache-hit step (paper Eq. 5): strictly O(1) compute and memory reads
-    for mode="tconst".  token: (B,) int32.  Returns (logits (B, V), cache).
+def decode_step_views(params: Params, cache: Dict[str, Any],
+                      token: jax.Array, cfg: ModelConfig,
+                      mode: str = "tconst"
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Layout-native cache-hit step (paper Eq. 5): strictly O(1) compute
+    and memory reads for mode="tconst".  ``cache`` maps bookkeeping names
+    to plain arrays and KV names to :mod:`repro.models.layouts`
+    FieldViews — the attention consumes the PHYSICAL representation
+    (paged pools are walked page-by-page, int8 dequant rides the QK/AV
+    loops) and the new token's K/V is appended *through* the views, so
+    non-dense layouts never round-trip a dense logical cache.
 
-    The caller (or :func:`repro.serving.engine`) must invoke :func:`resync`
-    once ``gen_len`` reaches ``W_og`` — the paper's periodic linear-time
-    synchronisation.
+    token: (B,) int32.  Returns (logits (B, V), updated cache dict with
+    the same view/array structure).
     """
     tc = cfg.tconst
     eps = cfg.norm_eps
@@ -541,51 +595,43 @@ def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     pos = cache["hist_len"] + cache["gen_len"]                   # (B,)
     x = E.embed_tokens(params["embed"], token[:, None], dtype)   # (B,1,D)
     cos_q, sin_q = _rope(pos[:, None], cfg)
+    nb = cfg.tconst_blocks
+    ctx_k, ctx_v = cache["ctx_k"], cache["ctx_v"]
+    use_tlin = mode == "tlin"
 
-    def block_body(x, xs):
-        block, ctx_k, ctx_v, gen_k, gen_v, hist_kv = xs
-        new_gk, new_gv = [], []
+    def block_body(ib, carry):
+        x, gk, gv = carry
+        block = jax.tree_util.tree_map(lambda a: a[ib], params["blocks"])
+        ctx_kb, ctx_vb = ctx_k.layer(ib), ctx_v.layer(ib)
+        gkb, gvb = gk.layer(ib), gv.layer(ib)
         for i in range(tc.h + 2):
             li = block["layers"][i]
             xn = rmsnorm(li["ln1"], x, eps)
-            out, gk, gv = A.decode_attend(
-                li["attn"], xn, gen_k[i], gen_v[i], cache["gen_len"],
-                cos_q, sin_q, cfg.logit_softcap)
-            new_gk.append(gk)
-            new_gv.append(gv)
+            out, gki, gvi = A.decode_attend_view(
+                li["attn"], xn, gkb.layer(i), gvb.layer(i),
+                cache["gen_len"], cos_q, sin_q, cfg.logit_softcap)
+            gkb = gkb.set_layer(i, gki)
+            gvb = gvb.set_layer(i, gvi)
             if i >= 1:
-                out = out + A.cross_attend_cached(
-                    li["attn"], xn, ctx_k[i - 1], ctx_v[i - 1],
-                    cache["ctx_valid"], cos_q, sin_q, cfg.logit_softcap)
-            elif hist_kv is not None:
-                hk, hv = hist_kv
-                slots = jnp.arange(hk.shape[1])[None]
-                hvalid = slots < cache["hist_len"][:, None]
-                out = out + A.cross_attend_cached(
-                    li["attn"], xn, hk, hv, hvalid, cos_q, sin_q,
-                    cfg.logit_softcap)
+                out = out + A.cross_attend_view(
+                    li["attn"], xn, ctx_kb.layer(i - 1),
+                    ctx_vb.layer(i - 1), cache["ctx_valid"],
+                    cos_q, sin_q, cfg.logit_softcap)
+            elif use_tlin:
+                # TLinFormer's O(N) history KV: the ONE paged field of
+                # this family — attended in its physical layout
+                out = out + A.cross_attend_view(
+                    li["attn"], xn, cache["hist_k"].layer(ib),
+                    cache["hist_v"].layer(ib), None, cos_q, sin_q,
+                    cfg.logit_softcap, valid_len=cache["hist_len"])
             x = x + out
             f, _ = _ffn_apply(li, rmsnorm(li["ln2"], x, eps), cfg)
             x = x + f
-        return x, (jnp.stack(new_gk), jnp.stack(new_gv))
+        return x, gk.set_layer(ib, gkb), gv.set_layer(ib, gvb)
 
-    nb = cfg.tconst_blocks
-    hist_xs = None
-    if mode == "tlin":
-        hist_xs = (cache["hist_k"], cache["hist_v"])
-
-    def scan_body(x, xs):
-        if mode == "tlin":
-            block, ck, cv, gk, gv, hk, hv = xs
-            return block_body(x, (block, ck, cv, gk, gv, (hk, hv)))
-        block, ck, cv, gk, gv = xs
-        return block_body(x, (block, ck, cv, gk, gv, None))
-
-    xs = (params["blocks"], cache["ctx_k"], cache["ctx_v"],
-          cache["gen_k"], cache["gen_v"])
-    if mode == "tlin":
-        xs = xs + (cache["hist_k"], cache["hist_v"])
-    x, (gk, gv) = jax.lax.scan(scan_body, x, xs)
+    x, gk, gv = jax.lax.fori_loop(
+        0, nb, lambda i, c: block_body(i, c),
+        (x, cache["gen_k"], cache["gen_v"]))
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = E.lm_head(params["embed"], x, cfg.logit_softcap)[:, 0]
@@ -596,6 +642,33 @@ def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     cache["tokens"] = cache["tokens"].at[jnp.arange(B), pos].set(token)
     cache["gen_len"] = cache["gen_len"] + 1
     return logits, cache
+
+
+def _dense_views(cache: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: LT.DenseView(v, CACHE_BATCH_AXES[k]) if k in KV_KEYS else v
+            for k, v in cache.items()}
+
+
+def _undense_views(cache: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v.dense() if isinstance(v, LT.FieldView) else v
+            for k, v in cache.items()}
+
+
+def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
+                cfg: ModelConfig, mode: str = "tconst"
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Dense-dict cache-hit step: the legacy entry point (launchers,
+    benchmarks) and the PARITY ORACLE the layout-native kernels are
+    tested against.  Wraps the dense arrays in DenseViews — the
+    dense-view dispatch is bit-identical to the historic dense path.
+
+    The caller (or :func:`repro.serving.engine`) must invoke :func:`resync`
+    once ``gen_len`` reaches ``W_og`` — the paper's periodic linear-time
+    synchronisation.
+    """
+    logits, out = decode_step_views(params, _dense_views(cache), token,
+                                    cfg, mode)
+    return logits, _undense_views(out)
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,

@@ -11,23 +11,46 @@ sequence length.
 Grid: (B, KV) — fully parallel; no sequential dimension, no scratch.
 The QK^T contraction, masked softmax, and PV contraction are fused in one
 kernel invocation per (batch, kv-head).
+
+Layout-native extensions (DecodeAPI v3, "KVView"):
+
+* **int8 KV** — when ``k_scale``/``v_scale`` are given, ``k``/``v`` are
+  int8 with per-vector float32 scales and the dequantisation is FUSED
+  into the QK / PV loops: the kernel reads 1 byte per element from HBM
+  and multiplies by the scale inside VMEM, so the quantized layout's 4x
+  byte saving is realised on the hot path instead of being paid back by
+  a dense dequantised materialisation.
+* **sliding window** — positions ``<= valid_len - 1`` but within the last
+  ``window`` slots are attended (the dense-LM per-layer local-attention
+  pattern), matching ``layers.attention.decode_attend``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 NEG_INF = -2.3819763e38
 
 
-def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, *, softcap: float):
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, *rest, softcap: float,
+                   window: int, quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
     q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)             # (S, D)
     v = v_ref[0, :, 0].astype(jnp.float32)             # (S, D)
+    if quant:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)    # (S, 1) scales
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)
     vl = vl_ref[0, 0]                                  # scalar int32
 
     scale = q.shape[-1] ** -0.5
@@ -37,6 +60,8 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, *, softcap: float):
         s = jnp.tanh(s / softcap) * softcap
     slot = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     mask = slot < vl
+    if window > 0:
+        mask = jnp.logical_and(mask, slot >= vl - window)
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -49,30 +74,47 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, *, softcap: float):
 
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             valid_len: jax.Array, *, softcap: float = 0.0,
+                            window: int = 0,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
                             interpret: bool = False) -> jax.Array:
     """q: (B, H, D) one token per sequence; k/v: (B, S, KV, D);
-    valid_len: (B,) — slots [0, valid_len) attended.  Returns (B, H, D)."""
+    valid_len: (B,) — slots [0, valid_len) attended (``window`` > 0
+    additionally limits attention to the last ``window`` of them).
+    int8 KV: pass ``k_scale``/``v_scale`` (B, S, KV, 1) float32 and int8
+    ``k``/``v`` — dequant is fused in-kernel.  Returns (B, H, D)."""
     B, H, D = q.shape
     S, KV = k.shape[1], k.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, D)
     vl = valid_len.reshape(B, 1).astype(jnp.int32)
+    quant = k_scale is not None
 
-    kernel = functools.partial(_decode_kernel, softcap=softcap)
+    kernel = functools.partial(_decode_kernel, softcap=softcap,
+                               window=window, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b, h: (b, 0)),            # valid_len
+        pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),  # q
+        pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # k
+        pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # v
+    ]
+    args = [vl, qg, k, v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, S, 1, 1), lambda b, h: (b, 0, h, 0)),  # kscale
+            pl.BlockSpec((1, S, 1, 1), lambda b, h: (b, 0, h, 0)),  # vscale
+        ]
+        args += [k_scale, v_scale]
     out = pl.pallas_call(
         kernel,
         grid=(B, KV),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),            # valid_len
-            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),  # q
-            pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # k
-            pl.BlockSpec((1, S, 1, D), lambda b, h: (b, 0, h, 0)),  # v
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), jnp.float32 if quant
+                                       else q.dtype),
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="tconst_decode_attention",
-    )(vl, qg, k, v)
-    return out.reshape(B, H, D)
+    )(*args)
+    return out.reshape(B, H, D).astype(q.dtype)

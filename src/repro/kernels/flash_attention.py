@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 NEG_INF = -2.3819763e38
 INVALID_POS = jnp.iinfo(jnp.int32).max // 2
 
@@ -128,7 +130,7 @@ def flash_attention_fwd_pallas(
             pltpu.VMEM((qb, 1), jnp.float32),      # running denom
             pltpu.VMEM((qb, D), jnp.float32),      # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_attention_fwd",

@@ -28,6 +28,8 @@ from repro.kernels import ref as REF
 from repro.kernels import xla_flash as XF
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_fwd_pallas
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention_pallas, paged_decode_attention_xla)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -97,6 +99,47 @@ def decode_attend_kv(q: jax.Array, k: jax.Array, v: jax.Array,
         return decode_attention_pallas(q, k, v, valid_len, softcap=softcap,
                                        interpret=_interpret())
     return REF.decode_reference(q, k, v, valid_len, softcap=softcap)
+
+
+def int8_decode_fused(q: jax.Array, kq: jax.Array, vq: jax.Array,
+                      k_scale: jax.Array, v_scale: jax.Array,
+                      valid_len: jax.Array, softcap: float = 0.0,
+                      window: int = 0) -> jax.Array:
+    """Fused int8 decode: dequant happens inside the QK/AV loops (1 HBM
+    byte per element).  Caller checks :func:`int8_fused_available`."""
+    return decode_attention_pallas(
+        q, kq, vq, valid_len, softcap=softcap, window=window,
+        k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
+
+
+def int8_fused_available(window) -> bool:
+    """The fused int8 kernel needs the Pallas path and a STATIC window
+    (it is baked into the kernel); traced per-layer windows fall back to
+    the dequantise-then-attend XLA path."""
+    return _pallas_enabled() and isinstance(window, int)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (in-kernel page-table walk)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                 page_table: jax.Array, valid_len: jax.Array, *,
+                 softcap: float = 0.0, window: "int | jax.Array" = 0,
+                 k_scale=None, v_scale=None) -> jax.Array:
+    """Layout-native paged decode attention: Pallas page-table-walk
+    kernel on the Pallas path (compiled on TPU, interpret elsewhere),
+    page-at-a-time XLA scan otherwise.  Neither materialises the dense
+    (B, max_len, KV, D) logical view."""
+    if _pallas_enabled():
+        return paged_decode_attention_pallas(
+            q, pool_k, pool_v, page_table, valid_len, softcap=softcap,
+            window=window, k_scale=k_scale, v_scale=v_scale,
+            interpret=_interpret())
+    return paged_decode_attention_xla(
+        q, pool_k, pool_v, page_table, valid_len, softcap=softcap,
+        window=window, k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------

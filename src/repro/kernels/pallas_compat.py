@@ -1,0 +1,14 @@
+"""Small jax-version compatibility shims for the Pallas TPU kernels.
+
+The TPU compiler-params class was renamed upstream
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); resolving it
+here keeps the kernels importable (and their interpret-mode parity tests
+runnable on CPU) across the jax versions this repo meets in CI and in the
+container images.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

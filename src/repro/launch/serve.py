@@ -44,6 +44,51 @@ def _layout_spec(args) -> LayoutSpec:
                       pool_pages=args.pool_pages or None)
 
 
+def validate_layout_args(ap, cfg, args, max_len: int) -> None:
+    """Startup validation of the paged-layout knobs against the model
+    config and launch geometry, so a mis-sized pool fails with a clear
+    message instead of a shape crash (or a scheduler rejection) at
+    first admission."""
+    if args.layout not in ("paged", "paged_int8"):
+        return
+    if cfg.attention_mode == "tconst" and cfg.arch_type not in \
+            ("ssm", "audio"):
+        # model-config check: pure-tconst KV is already O(1) — nothing
+        # has a length axis, so the pool stores nothing and the knobs
+        # are inert (tlin / dense-LM / enc-dec configs do page)
+        print("[serve] note: pure tconst KV is O(1); the paged layout "
+              "stores nothing in pages for this config (--page-size/"
+              "--pool-pages are inert)")
+    pages_per_slot = -(-max_len // args.page_size)
+    slots = args.slots if args.sessions else args.batch
+    full_pool = slots * pages_per_slot
+    if not args.pool_pages:
+        return                       # full pool: always valid, no allocator
+    if args.pool_pages > full_pool:
+        ap.error(
+            f"--pool-pages {args.pool_pages} exceeds the full pool: "
+            f"{slots} slots x {pages_per_slot} pages/slot "
+            f"(max_len {max_len} / page {args.page_size}) = {full_pool} "
+            f"pages — lower it or drop it for the full pool")
+    if not args.sessions and args.pool_pages < full_pool:
+        ap.error(
+            f"--pool-pages {args.pool_pages} < full pool {full_pool} needs "
+            f"the sessions-mode page allocator (uniform-batch prefill "
+            f"cannot place rows in an under-sized pool); add --sessions N "
+            f"or drop --pool-pages")
+    # largest session this launcher will submit must be admissible
+    worst_prompt = args.prompt_len + 5 * (args.sessions - 1)
+    worst_need = -(-(worst_prompt + args.gen + args.chunk)
+                   // args.page_size)
+    if worst_need > args.pool_pages:
+        ap.error(
+            f"--pool-pages {args.pool_pages} cannot admit the largest "
+            f"session: prompt {worst_prompt} + gen {args.gen} + chunk "
+            f"{args.chunk} needs {worst_need} pages of {args.page_size} "
+            f"tokens — raise --pool-pages to >= {worst_need} or shrink "
+            f"the sessions")
+
+
 def run_sessions(cfg, api, params, args) -> int:
     """Continuous-batching demo: N sessions with different prompt lengths
     admitted at staggered times into a fixed-slot batch; each streams its
@@ -93,8 +138,8 @@ def run_sessions(cfg, api, params, args) -> int:
 
     ok = True
     if args.temperature <= 0.0 and args.eos < 0:
-        if args.layout == "int8":
-            print("[serve]   (int8 layout: tokens may differ from the "
+        if args.layout in ("int8", "paged_int8"):
+            print("[serve]   (int8 layouts: tokens may differ from the "
                   "dense solo run within the quantization tolerance — "
                   "skipping the exact-match check)")
         else:                         # greedy: must match solo runs
@@ -120,8 +165,10 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--layout", default="dense",
-                    choices=["dense", "paged", "int8"],
-                    help="physical cache layout behind the DecodeState")
+                    choices=["dense", "paged", "int8", "paged_int8"],
+                    help="physical cache layout behind the DecodeState "
+                         "(paged_int8 = int8 pages in the shared pool, "
+                         "scales in the page metadata)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="tokens per page (paged layout)")
     ap.add_argument("--pool-pages", type=int, default=0,
@@ -145,6 +192,14 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+
+    if args.sessions:
+        eff_max_len = args.max_len or \
+            (args.prompt_len + 5 * (args.sessions - 1) + args.gen + 64)
+    else:
+        eff_max_len = args.max_len or (args.prompt_len + args.gen + 64)
+    validate_layout_args(ap, cfg, args, eff_max_len)
+
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(args.seed))
 

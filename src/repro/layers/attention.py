@@ -186,6 +186,110 @@ def project_kv(params: Params, x: jax.Array,
     return k, v
 
 
+def _attend_views(q: jax.Array, k_view, v_view, *,
+                  valid_len: Optional[jax.Array] = None,
+                  kv_valid: Optional[jax.Array] = None,
+                  logit_softcap: float = 0.0,
+                  window: "int | jax.Array" = 0) -> jax.Array:
+    """Dispatch one-token attention over a per-layer KVView pair
+    (``repro.models.layouts``): the kernel consumes the PHYSICAL
+    representation.
+
+    * :class:`~repro.models.layouts.PagedView` — in-kernel page-table
+      walk (Pallas on the Pallas path, page-at-a-time XLA scan
+      otherwise); int8 pools fuse the dequant.  Needs a prefix
+      ``valid_len`` (+ optional sliding ``window``).
+    * :class:`~repro.models.layouts.QuantView` — fused int8 kernel on
+      the Pallas path; dequantise-then-``sdpa`` fallback (XLA fuses the
+      scale multiply into the contraction).
+    * :class:`~repro.models.layouts.DenseView` — exactly the historic
+      dense path (bit-identical to the pre-KVView code).
+
+    q: (B, 1, H, D) RoPE'd queries.  Returns (B, 1, H, D).
+    """
+    from repro.kernels import ops
+    from repro.models import layouts as LT
+    dtype = q.dtype
+    if isinstance(k_view, LT.PagedView):
+        assert kv_valid is None and valid_len is not None, \
+            "paged attention needs a prefix valid_len"
+        if k_view.quant:
+            o = ops.paged_decode(
+                q[:, 0], k_view.storage.q, v_view.storage.q,
+                k_view.page_table, valid_len, softcap=logit_softcap,
+                window=window, k_scale=k_view.storage.scale,
+                v_scale=v_view.storage.scale)
+        else:
+            o = ops.paged_decode(
+                q[:, 0], k_view.storage.data.astype(dtype),
+                v_view.storage.data.astype(dtype), k_view.page_table,
+                valid_len, softcap=logit_softcap, window=window)
+        return o[:, None]
+    if isinstance(k_view, LT.QuantView) and valid_len is not None and \
+            kv_valid is None and ops.int8_fused_available(window):
+        o = ops.int8_decode_fused(q[:, 0], k_view.q, v_view.q,
+                                  k_view.scale, v_view.scale, valid_len,
+                                  logit_softcap, window)
+        return o[:, None]
+    k = k_view.dense().astype(dtype)
+    v = v_view.dense().astype(dtype)
+    if kv_valid is None and valid_len is not None:
+        slots = jnp.arange(k.shape[1])[None]                   # (1, S)
+        kv_valid = slots < valid_len[:, None]
+        w = jnp.asarray(window, jnp.int32)
+        weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+        kv_valid = jnp.logical_and(kv_valid,
+                                   slots >= valid_len[:, None] - weff)
+    return sdpa(q, k, v, mask=None, logit_softcap=logit_softcap,
+                kv_valid=kv_valid)
+
+
+def decode_attend_view(params: Params, x: jax.Array, k_view, v_view,
+                       cache_len: jax.Array,
+                       cos_q: Optional[jax.Array] = None,
+                       sin_q: Optional[jax.Array] = None,
+                       logit_softcap: float = 0.0,
+                       window: "int | jax.Array" = 0):
+    """Layout-native one-token decode (:func:`decode_attend` over
+    KVViews): project q/k/v for the new token, append K/V *through the
+    view* (paged: only the owning page is touched; int8: the vector is
+    quantized in place), attend over slots ``<= cache_len`` in the
+    physical representation.  Returns (out (B,1,d), k_view, v_view)."""
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    q, k_new, v_new = qkv_proj(params, x, x, dtype)
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+        k_new = apply_rope(k_new, cos_q, sin_q)
+    k_view = k_view.write_token(cache_len, k_new[:, 0])
+    v_view = v_view.write_token(cache_len, v_new[:, 0])
+    o = _attend_views(q, k_view, v_view, valid_len=cache_len + 1,
+                      logit_softcap=logit_softcap, window=window)
+    return out_proj(params, o, dtype), k_view, v_view
+
+
+def cross_attend_view(params: Params, x: jax.Array, k_view, v_view,
+                      kv_valid: Optional[jax.Array] = None,
+                      cos_q: Optional[jax.Array] = None,
+                      sin_q: Optional[jax.Array] = None,
+                      logit_softcap: float = 0.0,
+                      valid_len: Optional[jax.Array] = None,
+                      window: "int | jax.Array" = 0) -> jax.Array:
+    """Layout-native :func:`cross_attend_cached`: queries attend to
+    pre-projected cached K/V read through a KVView pair.  Pass EITHER a
+    general (B, S) ``kv_valid`` mask (dense/int8 views only) or a prefix
+    ``valid_len`` (any view, required for paged)."""
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(dtype))
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+    o = _attend_views(q, k_view, v_view, valid_len=valid_len,
+                      kv_valid=kv_valid, logit_softcap=logit_softcap,
+                      window=window)
+    return out_proj(params, o, dtype)
+
+
 def decode_attend(params: Params, x: jax.Array, k_cache: jax.Array,
                   v_cache: jax.Array, cache_len: jax.Array,
                   cos_q: Optional[jax.Array] = None,

@@ -104,3 +104,17 @@ def where_rows(rows: jax.Array, new: jax.Array, old: jax.Array,
     shape = [1] * new.ndim
     shape[axis] = rows.shape[0]
     return jnp.where(rows.reshape(shape), new, old)
+
+
+def take_rows(arr: jax.Array, idx: jax.Array, axis: int) -> jax.Array:
+    """Gather rows ``idx`` along a batch axis (one dispatch, any count).
+    Shared by the compacted resync and the cache-layout row scatter."""
+    return jnp.take(arr, idx, axis=axis)
+
+
+def put_rows(arr: jax.Array, idx: jax.Array, vals: jax.Array,
+             axis: int) -> jax.Array:
+    """Scatter rows ``vals`` back into ``idx`` along a batch axis."""
+    moved = jnp.moveaxis(arr, axis, 0)
+    moved = moved.at[idx].set(jnp.moveaxis(vals, axis, 0).astype(arr.dtype))
+    return jnp.moveaxis(moved, 0, axis)

@@ -12,10 +12,14 @@ Two surfaces live here:
   ``bookkeeping`` partition, so cache-size reporting (paper Fig 8g)
   reads the partition instead of guessing from field names.  The
   *physical* representation of ``kv`` is a pluggable
-  :mod:`repro.models.layouts` backend (dense / paged / int8) riding in
-  the pytree aux data; the decode kernels always see the dense logical
-  view through ``DecodeState.merged``.  The protocol is slot-oriented
-  for continuous batching:
+  :mod:`repro.models.layouts` backend (dense / paged / int8 /
+  paged_int8) riding in the pytree aux data; the decode kernels consume
+  it LAYOUT-NATIVELY through ``DecodeState.decode_views()`` — per-field
+  KVViews carrying the physical buffers + page-table/scale metadata —
+  so a paged step walks pages in-kernel and an int8 step fuses the
+  dequant, with zero dense densification on the hot path
+  (``DecodeState.merged`` survives as the test/parity oracle).  The
+  protocol is slot-oriented for continuous batching:
 
     ``init_state(slots, max_len)``          fixed-shape multi-slot state
     ``prefill_into_slot(params, state, slot, tokens)``
@@ -54,6 +58,7 @@ import numpy as np
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.core import tconst as TC
+from repro.layers.common import put_rows, take_rows, where_rows
 from repro.models import encdec as ED
 from repro.models import layouts as LT
 from repro.models import lm as LM
@@ -144,9 +149,37 @@ class DecodeState:
         return {k: v for k, v in self.bookkeeping.items()
                 if k.startswith(LT.LAYOUT_BK_PREFIX)}
 
+    # -- KVView: what the decode kernels consume ----------------------------
+    def kv_views(self) -> Dict[str, Any]:
+        """Per-field :mod:`repro.models.layouts` FieldViews over the
+        PHYSICAL kv buffers (+ index/scale metadata) — the decode-kernel
+        contract.  Views alias the buffers; no copy, no densification."""
+        return self.layout.view(self.kv, self.bookkeeping, self.axes)
+
+    def decode_views(self) -> Dict[str, Any]:
+        """The dict the view-native decode kernels take: non-layout
+        bookkeeping as plain arrays + kv fields as FieldViews."""
+        bk = {k: v for k, v in self.bookkeeping.items()
+              if not k.startswith(LT.LAYOUT_BK_PREFIX)}
+        return {**bk, **self.kv_views()}
+
+    def absorb(self, views: Dict[str, Any]) -> "DecodeState":
+        """Rebuild a DecodeState from an updated ``decode_views`` dict.
+        Views alias the physical buffers, so this is pure unwrapping —
+        the inverse round-trip of ``merged``/``from_dense`` without the
+        pack/unpack compute."""
+        kv = LT.absorb_views({k: v for k, v in views.items()
+                              if isinstance(v, LT.FieldView)})
+        bk = {k: v for k, v in views.items()
+              if not isinstance(v, LT.FieldView)}
+        bk.update(self.layout_bookkeeping())
+        return DecodeState(kv, bk, self.axes, self.layout)
+
     def merged(self) -> Dict[str, Any]:
-        """The dense LOGICAL cache dict the decode kernels consume
-        (layout-owned bookkeeping filtered out, kv unpacked)."""
+        """The dense LOGICAL cache dict (layout-owned bookkeeping
+        filtered out, kv unpacked/densified).  OFF the decode hot path:
+        this is the test/parity ORACLE and the legacy-wrapper surface —
+        the kernels themselves consume :meth:`kv_views`."""
         bk = {k: v for k, v in self.bookkeeping.items()
               if not k.startswith(LT.LAYOUT_BK_PREFIX)}
         return {**bk, **self.layout.unpack(self.kv, self.bookkeeping,
@@ -171,6 +204,20 @@ class DecodeState:
         paged pools and int8+scales report their true bytes."""
         return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
                    for l in jax.tree_util.tree_leaves(self.kv))
+
+    def step_view_bytes(self) -> int:
+        """HBM bytes a layout-native decode step actually touches —
+        assigned pages + table for paged fields, physical buffers
+        otherwise.  Host-side (reads the live page table); concrete
+        arrays only.  Compare against :meth:`dense_logical_bytes`."""
+        return LT.view_touched_bytes(self.kv_views())
+
+    def dense_logical_bytes(self) -> int:
+        """Bytes of the dense LOGICAL kv view — what a ``merged()``-based
+        step would materialise and read per token (the pre-KVView cost
+        model, kept as the benchmark's comparison baseline)."""
+        return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in self.dense_shapes().values())
 
     @property
     def slots(self) -> int:
@@ -200,7 +247,6 @@ class DecodeState:
         """Per-slot select: take self where ``rows`` (B,) is True, else
         ``other``.  Used to freeze inactive/done slots inside a decode
         chunk."""
-        from repro.layers.common import where_rows
         bk = {name: where_rows(rows, leaf, other.bookkeeping[name],
                                self.axes[name])
               for name, leaf in self.bookkeeping.items()}
@@ -381,14 +427,20 @@ class DecodeAPI:
 class TConstDecode(DecodeAPI):
     """Paper §4 serving: O(1) cache-hit steps, periodic O(N) resync.
 
-    The resync decision lives ON DEVICE: ``step`` checks the per-slot
-    ``gen_len`` phase counters and runs the W_og-boundary global
-    synchronisation through the compacted ``sync_rows`` while-loop —
-    each boundary row is gathered, synced at batch size 1 and scattered
-    back, so slots admitted at different times stay token-for-token
-    identical to their solo runs without paying for each other's misses
-    (mode="tlin" keeps the O(N) history KV per block, which the paged
-    layout can split into pages).
+    Layout-native: ``raw_step`` hands the kernels ``state.decode_views()``
+    — the physical buffers plus index/scale metadata — so the hit step
+    never densifies the cache (mode="tlin" keeps the O(N) history KV per
+    block, which the paged layouts attend via the in-kernel page-table
+    walk).  The resync decision lives ON DEVICE: ``sync_mask`` reads only
+    the per-slot ``gen_len`` phase counters, and ``sync_rows`` gathers
+    ALL boundary rows' bookkeeping in one dispatch (bucketed — see
+    ``tconst.resync_rows_compacted``), reruns their O(N) synchronisation
+    at the compacted batch size, and writes the fresh ctx/hist KV back
+    THROUGH the layout (paged: page-map surgery on the rows' own pages;
+    int8: fresh values quantized on write).  ``resync`` rebuilds that KV
+    from the raw token ids, so the sync path reads no KV at all — slots
+    admitted at different times stay token-for-token identical to their
+    solo runs without paying for each other's misses.
     """
 
     cfg: ModelConfig
@@ -421,28 +473,43 @@ class TConstDecode(DecodeAPI):
         return logits[0], state.with_slot(slot, self._row_state(row))
 
     def raw_step(self, params, state, token):
-        logits, cache = TC.decode_step(params, state.merged(), token,
-                                       self.cfg, mode=self.mode)
-        return logits, self._rewrap(state, cache)
+        logits, out = TC.decode_step_views(params, state.decode_views(),
+                                           token, self.cfg, mode=self.mode)
+        return logits, state.absorb(out)
 
     def sync_mask(self, state):
-        return TC.pending_resync_rows(state.merged(), self.cfg)
+        return TC.pending_resync_rows(state.bookkeeping, self.cfg)
 
     def sync_rows(self, params, state, rows):
-        cache = TC.resync_rows_compacted(params, state.merged(), self.cfg,
-                                         rows, self.mode)
-        return self._rewrap(state, cache)
+        """Layout-aware batched compacted resync (see class docstring):
+        ONE gather of the pending rows' bookkeeping, ONE O(N) resync at
+        the bucketed pending count, KV written back through the layout.
+        Zero pending rows selects the identity branch — this is the
+        on-device decision, no host round-trip."""
+        cfg = self.cfg
+        axes = TC.CACHE_BATCH_AXES
 
-    def step(self, params, state, token):
-        # fused sync + hit step on ONE dense view, so non-dense layouts
-        # pay a single unpack/pack round-trip per scanned step
-        cache = state.merged()
-        rows = TC.pending_resync_rows(cache, self.cfg)
-        cache = TC.resync_rows_compacted(params, cache, self.cfg, rows,
-                                         self.mode)
-        logits, cache = TC.decode_step(params, cache, token, self.cfg,
-                                       mode=self.mode)
-        return logits, self._rewrap(state, cache)
+        def factory(kb: int):
+            def branch(state, idx, sel):
+                bk = state.bookkeeping
+                row_in = {f: take_rows(bk[f], idx, axes[f])
+                          for f in TC.RESYNC_INPUT_KEYS}
+                new = TC.resync(params, row_in, cfg, self.mode)
+                out_bk = dict(bk)
+                views = state.kv_views()
+                for f, v in new.items():
+                    if f in views:
+                        views[f] = views[f].scatter_rows(idx, sel, v)
+                    else:
+                        old = take_rows(bk[f], idx, axes[f])
+                        vals = where_rows(sel, v.astype(bk[f].dtype), old,
+                                          axes[f])
+                        out_bk[f] = put_rows(bk[f], idx, vals, axes[f])
+                return DecodeState(LT.absorb_views(views), out_bk,
+                                   state.axes, state.layout)
+            return branch
+
+        return TC.compacted_rows_switch(rows, state, factory)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -491,9 +558,9 @@ class DenseDecode(DecodeAPI):
         return logits[0], state.with_slot(slot, self._row_state(cache))
 
     def raw_step(self, params, state, token):
-        logits, cache = LM.lm_decode_step(params, state.merged(), token,
-                                          self.cfg)
-        return logits, self._rewrap(state, cache)
+        logits, out = LM.lm_decode_step_views(params, state.decode_views(),
+                                              token, self.cfg)
+        return logits, state.absorb(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -532,14 +599,16 @@ class EncDecDecode(DecodeAPI):
         return logits[0], state.with_slot(slot, self._row_state(cache))
 
     def raw_step(self, params, state, token):
-        logits, cache = ED.encdec_decode_step(params, state.merged(), token,
-                                              self.cfg)
-        return logits, self._rewrap(state, cache)
+        logits, out = ED.encdec_decode_step_views(params,
+                                                  state.decode_views(),
+                                                  token, self.cfg)
+        return logits, state.absorb(out)
 
 
 def build_decode(cfg: ModelConfig, layout: Any = None) -> DecodeAPI:
     """Build the decode protocol for ``cfg`` with a cache layout chosen
-    by ``layout`` ("dense" | "paged" | "int8" | LayoutSpec | None)."""
+    by ``layout`` ("dense" | "paged" | "int8" | "paged_int8" |
+    LayoutSpec | None)."""
     spec = LT.as_spec(layout)
     if _is_tconst(cfg):
         return TConstDecode(cfg, spec)

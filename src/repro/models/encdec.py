@@ -236,35 +236,53 @@ def encdec_prefill(params: Params, tokens: jax.Array, audio_feats: jax.Array,
     return logits, cache
 
 
-def encdec_decode_step(params: Params, cache: Dict[str, Any],
-                       token: jax.Array, cfg: ModelConfig
-                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+def encdec_decode_step_views(params: Params, cache: Dict[str, Any],
+                             token: jax.Array, cfg: ModelConfig
+                             ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Layout-native one-token decode: KV names in ``cache`` are
+    ``repro.models.layouts`` FieldViews.  The growing decoder KV (paged /
+    int8) is appended and attended in its physical representation; the
+    fixed-size cross K/V is read through its view (int8-capable).
+    token: (B,) -> (logits (B, V), cache)."""
     dtype = jnp.dtype(cfg.dtype)
     eps = cfg.norm_eps
-    B = token.shape[0]
     x = E.embed_tokens(params["embed"], token[:, None], dtype)
     pos = cache["len"][:, None]
     cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
     window = cfg.sliding_window if cfg.attention_mode == "sliding" else 0
 
-    def body(x, xs):
-        layer, slc = xs
+    def body(i, carry):
+        x, k_all, v_all = carry
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["dec_layers"])
         xn = layernorm(layer["ln1"], x, eps)
-        out, k, v = A.decode_attend(layer["attn"], xn, slc["k"], slc["v"],
-                                    cache["len"], cos, sin, 0.0, window)
+        out, kv, vv = A.decode_attend_view(
+            layer["attn"], xn, k_all.layer(i), v_all.layer(i),
+            cache["len"], cos, sin, 0.0, window)
         x = x + out
         xc = layernorm(layer["lnc"], x, eps)
-        x = x + A.cross_attend_cached(layer["cross"], xc, slc["cross_k"],
-                                      slc["cross_v"], None)
+        x = x + A.cross_attend_view(
+            layer["cross"], xc, cache["cross_k"].layer(i),
+            cache["cross_v"].layer(i), None)
         x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
-        return x, {"k": k, "v": v}
+        return x, k_all.set_layer(i, kv), v_all.set_layer(i, vv)
 
-    slices = {"k": cache["k"], "v": cache["v"],
-              "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
-    x, new = jax.lax.scan(body, x, (params["dec_layers"], slices))
+    x, k_all, v_all = jax.lax.fori_loop(
+        0, cfg.n_layers, body, (x, cache["k"], cache["v"]))
     cache = dict(cache)
-    cache["k"], cache["v"] = new["k"], new["v"]
+    cache["k"], cache["v"] = k_all, v_all
     x = layernorm(params["dec_norm"], x, eps)
     logits = E.lm_head(params["embed"], x)[:, 0]
     cache["len"] = cache["len"] + 1
     return logits, cache
+
+
+def encdec_decode_step(params: Params, cache: Dict[str, Any],
+                       token: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Dense-dict one-token decode: legacy entry point / parity oracle."""
+    from repro.models import layouts as LT
+    views = {k: LT.DenseView(v, CACHE_BATCH_AXES[k]) if k in KV_KEYS else v
+             for k, v in cache.items()}
+    logits, out = encdec_decode_step_views(params, views, token, cfg)
+    return logits, {k: v.dense() if isinstance(v, LT.FieldView) else v
+                    for k, v in out.items()}

@@ -1,37 +1,44 @@
 """Pluggable physical cache layouts behind :class:`repro.models.api.DecodeState`.
 
-The decode kernels (``core/tconst.py``, ``models/lm.py``, ``models/encdec.py``)
-consume a *logical* dense cache — a dict of fixed-shape arrays with a batch
-("slot") axis.  A :class:`CacheLayout` decides how those arrays are
-*physically* stored inside ``DecodeState.kv`` and translates between the two:
+The decode kernels (``core/tconst.py``, ``models/lm.py``,
+``models/encdec.py``) consume the cache through **KVViews** — per-field
+descriptors (:class:`DenseView` / :class:`QuantView` / :class:`PagedView`)
+produced by ``CacheLayout.view(kv, bookkeeping, axes)``.  A view holds the
+PHYSICAL buffers plus the index/scale metadata needed to read or append
+one token *in that representation*: the kernels walk the page table /
+apply the per-vector scales themselves, and nothing on the decode hot
+path materialises the dense ``slots x max_len`` logical cache.  The dense
+logical dict (``DecodeState.merged`` via :meth:`pack`/:meth:`unpack`)
+survives only as the test/parity oracle and for O(N) admission paths
+(prefill, resync row scatter).
 
-* :class:`DenseLayout`    — physical == logical (PR-1 behaviour).
-* :class:`PagedLayout`    — every length-axis KV buffer is split into
+Layouts:
+
+* :class:`DenseLayout`     — physical == logical.
+* :class:`PagedLayout`     — every length-axis KV buffer is split into
   fixed-size pages living in one shared pool per field, with a per-slot
   page table in bookkeeping.  The pool can be sized *below*
   ``slots * pages_per_slot`` (short sessions stop paying ``max_len``
   bytes); page assignment is host-side slot surgery in the scheduler —
-  admission/eviction touch the page map, never full rows.  Token ids and
-  phase counters are bookkeeping and stay dense.
+  admission/eviction touch the page map, never full rows.  With
+  ``quant_fields`` set ("paged_int8") the pool pages hold int8 vectors
+  and the per-vector float32 scales ride in a parallel scale pool — the
+  page metadata — so footprint composes (~4x on top of the pool saving).
 * :class:`QuantizedLayout` — int8 KV with per-vector (last-axis) float32
-  scales, dequantized on the fly when the decode kernels read the state.
+  scales.  Decode kernels fuse the dequantisation into the QK/AV loops
+  (Pallas) or read the dequantised values per-field (XLA fallback).
   Symmetric round-to-nearest; requantizing an unchanged entry is
   idempotent, so no drift accumulates across decode steps.
 
 All layouts are frozen (hashable) dataclasses: they ride in the
 ``DecodeState`` pytree **aux data**, so jitted functions specialise on the
-layout exactly like they specialise on shapes.
+layout exactly like they specialise on shapes.  Views are registered
+pytrees, so they ride ``lax.fori_loop`` carries and ``lax.scan`` bodies.
 
 Layout methods take the *dense field axes* map (the model's
 ``CACHE_BATCH_AXES``) and derive physical axes themselves; layout-owned
 bookkeeping fields carry the ``layout__`` prefix so the model-facing dense
 view (``DecodeState.merged``) can filter them out.
-
-Note on fidelity: paged unpack gathers pages into the dense logical view
-before the kernels run (and pack scatters back), so paging here buys the
-*memory footprint* and the admission/eviction surgery of a paged server,
-not in-kernel page-table walks — a production port would fuse the gather
-into the attention kernels.
 """
 from __future__ import annotations
 
@@ -40,11 +47,21 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.layers.common import where_rows
+from repro.layers.common import put_rows, take_rows, where_rows
 
 LAYOUT_BK_PREFIX = "layout__"
 PAGE_TABLE = LAYOUT_BK_PREFIX + "page_table"
+
+_QUANT_SUFFIXES = ("__q", "__scale")
+
+
+def _base_name(field: str) -> str:
+    for suffix in _QUANT_SUFFIXES:
+        if field.endswith(suffix):
+            return field[: -len(suffix)]
+    return field
 
 
 # ---------------------------------------------------------------------------
@@ -56,8 +73,8 @@ PAGE_TABLE = LAYOUT_BK_PREFIX + "page_table"
 class LayoutSpec:
     """User-facing layout choice, before shapes are known.
 
-    kind: "dense" | "paged" | "int8".
-    page_size: tokens per page (paged).
+    kind: "dense" | "paged" | "int8" | "paged_int8".
+    page_size: tokens per page (paged / paged_int8).
     pool_pages: total pages in the shared pool (paged); None = full
     ``slots * pages_per_slot`` (no saving, but no allocator needed —
     required for the uniform-batch ``prefill`` path).  A smaller pool
@@ -69,7 +86,7 @@ class LayoutSpec:
     pool_pages: Optional[int] = None
 
     def __post_init__(self):
-        if self.kind not in ("dense", "paged", "int8"):
+        if self.kind not in ("dense", "paged", "int8", "paged_int8"):
             raise ValueError(f"unknown cache layout kind: {self.kind!r}")
         if self.page_size < 1:
             raise ValueError("page_size must be positive")
@@ -103,9 +120,311 @@ def bind_layout(spec: LayoutSpec, *, slots: int, max_len: int,
                                dtype=dtype)
     pps = -(-max_len // spec.page_size)
     pool = slots * pps if spec.pool_pages is None else spec.pool_pages
+    quant = tuple(sorted(quant_fields)) if spec.kind == "paged_int8" else ()
     return PagedLayout(page=spec.page_size, pool_pages=pool, max_len=max_len,
                        slots=slots,
-                       fields=tuple(sorted(length_axes.items())))
+                       fields=tuple(sorted(length_axes.items())),
+                       quant_fields=quant, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 primitives
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector (last axis) int8 quantization."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KVView: per-field physical descriptors the decode kernels consume
+# ---------------------------------------------------------------------------
+
+
+class FieldView:
+    """Base class for per-field cache views (see module docstring).
+
+    The per-layer convention: after peeling all leading layer axes with
+    :meth:`layer`, the LOGICAL field is (B, S, KV, D) — batch axis 0,
+    length axis 1 — and token writes/attends are defined.  ``dense()``
+    works at any level and is the oracle escape hatch."""
+
+    def layer(self, i) -> "FieldView":
+        raise NotImplementedError
+
+    def set_layer(self, i, sub: "FieldView") -> "FieldView":
+        raise NotImplementedError
+
+    def dense(self) -> jax.Array:
+        raise NotImplementedError
+
+    def write_token(self, pos: jax.Array, vec: jax.Array) -> "FieldView":
+        """Append one (B, KV, D) vector at per-slot position ``pos`` (B,).
+        Only valid at the per-layer level."""
+        raise NotImplementedError
+
+    def scatter_rows(self, idx: jax.Array, sel: jax.Array,
+                     rows: jax.Array) -> "FieldView":
+        """Write dense logical ``rows`` (k rows along the batch axis)
+        into slots ``idx`` (k,), but only where ``sel`` (k,) is True —
+        unselected slots come through bit-identical.  Stacked level."""
+        raise NotImplementedError
+
+
+def _put_selected(arr: jax.Array, idx: jax.Array, sel: jax.Array,
+                  rows: jax.Array, axis: int) -> jax.Array:
+    old = take_rows(arr, idx, axis)
+    vals = where_rows(sel, rows.astype(arr.dtype), old, axis)
+    return put_rows(arr, idx, vals, axis)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseView(FieldView):
+    """Physical == logical: one dense array."""
+
+    data: jax.Array
+    batch_axis: int = 0
+
+    def tree_flatten(self):
+        return (self.data,), (self.batch_axis,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    def layer(self, i):
+        return DenseView(jax.lax.dynamic_index_in_dim(
+            self.data, i, 0, keepdims=False), max(0, self.batch_axis - 1))
+
+    def set_layer(self, i, sub):
+        return DenseView(jax.lax.dynamic_update_index_in_dim(
+            self.data, sub.data.astype(self.data.dtype), i, 0),
+            self.batch_axis)
+
+    def dense(self):
+        return self.data
+
+    def write_token(self, pos, vec):
+        b = jnp.arange(vec.shape[0])
+        return DenseView(self.data.at[b, pos].set(
+            vec.astype(self.data.dtype)), self.batch_axis)
+
+    def scatter_rows(self, idx, sel, rows):
+        return DenseView(_put_selected(self.data, idx, sel, rows,
+                                       self.batch_axis), self.batch_axis)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantView(FieldView):
+    """int8 values + per-vector (last axis) float32 scales."""
+
+    q: jax.Array
+    scale: jax.Array
+    batch_axis: int = 0
+    dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.batch_axis, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def layer(self, i):
+        return QuantView(
+            jax.lax.dynamic_index_in_dim(self.q, i, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(self.scale, i, 0, keepdims=False),
+            max(0, self.batch_axis - 1), self.dtype)
+
+    def set_layer(self, i, sub):
+        return QuantView(
+            jax.lax.dynamic_update_index_in_dim(self.q, sub.q, i, 0),
+            jax.lax.dynamic_update_index_in_dim(self.scale, sub.scale, i, 0),
+            self.batch_axis, self.dtype)
+
+    def dense(self):
+        return dequantize_int8(self.q, self.scale, jnp.dtype(self.dtype))
+
+    def write_token(self, pos, vec):
+        b = jnp.arange(vec.shape[0])
+        qv, sv = quantize_int8(vec)
+        return QuantView(self.q.at[b, pos].set(qv),
+                         self.scale.at[b, pos].set(sv),
+                         self.batch_axis, self.dtype)
+
+    def scatter_rows(self, idx, sel, rows):
+        qr, sr = quantize_int8(rows)
+        return QuantView(
+            _put_selected(self.q, idx, sel, qr, self.batch_axis),
+            _put_selected(self.scale, idx, sel, sr, self.batch_axis),
+            self.batch_axis, self.dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedView(FieldView):
+    """Length-axis field as a shared page pool + per-slot page table.
+
+    ``storage`` is the pool in its element representation — a
+    :class:`DenseView` (float pool ``(..., pool+1, page, KV, D)``) or a
+    :class:`QuantView` (int8 pool + float32 scale pool, the paged_int8
+    composition).  ``lead`` counts the leading layer axes still stacked
+    on the pool; the page table (B, pages_per_slot) is shared across
+    them.  The decode kernels receive the pool + table directly
+    (``repro.kernels.paged_decode_attention``)."""
+
+    storage: FieldView
+    page_table: jax.Array
+    page: int = 0
+    max_len: int = 0
+    trash: int = 0
+    lead: int = 0
+
+    def tree_flatten(self):
+        return (self.storage, self.page_table), \
+            (self.page, self.max_len, self.trash, self.lead)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def quant(self) -> bool:
+        return isinstance(self.storage, QuantView)
+
+    def _pool_children(self):
+        if self.quant:
+            return (self.storage.q, self.storage.scale)
+        return (self.storage.data,)
+
+    def _rebuild(self, pools):
+        if self.quant:
+            st = QuantView(pools[0], pools[1], self.storage.batch_axis,
+                           self.storage.dtype)
+        else:
+            st = DenseView(pools[0], self.storage.batch_axis)
+        return PagedView(st, self.page_table, self.page, self.max_len,
+                         self.trash, self.lead)
+
+    def layer(self, i):
+        v = self._rebuild(tuple(
+            jax.lax.dynamic_index_in_dim(p, i, 0, keepdims=False)
+            for p in self._pool_children()))
+        return dataclasses.replace(v, lead=self.lead - 1)
+
+    def set_layer(self, i, sub: "PagedView"):
+        return self._rebuild(tuple(
+            jax.lax.dynamic_update_index_in_dim(p, s, i, 0)
+            for p, s in zip(self._pool_children(), sub._pool_children())))
+
+    def dense(self):
+        """Gather pages into the dense logical array — ORACLE/debug only
+        (this is exactly the densification the kernels avoid)."""
+        la = self.lead + 1
+        out = []
+        for p in self._pool_children():
+            g = jnp.take(p, self.page_table, axis=self.lead)
+            g = g.reshape(g.shape[:la] + (-1,) + g.shape[la + 2:])
+            out.append(jax.lax.slice_in_dim(g, 0, self.max_len, axis=la))
+        if self.quant:
+            return dequantize_int8(out[0], out[1],
+                                   jnp.dtype(self.storage.dtype))
+        return out[0]
+
+    def _to_pages(self, x: jax.Array, la: int) -> jax.Array:
+        pps = self.pages_per_slot
+        pad = pps * self.page - x.shape[la]
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[la] = (0, pad)
+            x = jnp.pad(x, widths)
+        return x.reshape(x.shape[:la] + (pps, self.page) + x.shape[la + 1:])
+
+    def write_token(self, pos, vec):
+        """Append through the page table: physical page ``pt[b, pos //
+        page]``, offset ``pos % page`` — only the owning page is touched."""
+        assert self.lead == 0, "write_token needs a per-layer view"
+        b = jnp.arange(vec.shape[0])
+        pidx = self.page_table[b, pos // self.page]
+        off = pos % self.page
+        if self.quant:
+            qv, sv = quantize_int8(vec)
+            return self._rebuild((
+                self.storage.q.at[pidx, off].set(qv),
+                self.storage.scale.at[pidx, off].set(sv)))
+        return self._rebuild((self.storage.data.at[pidx, off].set(
+            vec.astype(self.storage.data.dtype)),))
+
+    def scatter_rows(self, idx, sel, rows):
+        """Write k dense logical rows through the rows' own pages (page-
+        map surgery: other slots' pages are never touched)."""
+        la = self.lead + 1                      # length axis at this level
+        pt_rows = jnp.take(self.page_table, idx, axis=0)     # (k, pps)
+        parts = [rows]
+        if self.quant:
+            parts = list(quantize_int8(rows))
+        pools = []
+        for pool, vals in zip(self._pool_children(), parts):
+            pages = self._to_pages(vals.astype(pool.dtype), la)
+            old = jnp.take(pool, pt_rows, axis=self.lead)
+            pages = where_rows(sel, pages, old, self.lead)
+            ix = (slice(None),) * self.lead + (pt_rows,)
+            pools.append(pool.at[ix].set(pages))
+        return self._rebuild(tuple(pools))
+
+
+def absorb_views(views: Dict[str, FieldView]) -> Dict[str, jax.Array]:
+    """Inverse of ``CacheLayout.view``: unwrap updated views back into the
+    physical ``DecodeState.kv`` dict.  Pure unwrapping — the views alias
+    the physical buffers, so there is no repack compute."""
+    kv: Dict[str, jax.Array] = {}
+    for f, v in views.items():
+        st = v.storage if isinstance(v, PagedView) else v
+        if isinstance(st, QuantView):
+            kv[f + "__q"], kv[f + "__scale"] = st.q, st.scale
+        else:
+            kv[f] = st.data
+    return kv
+
+
+def view_touched_bytes(views: Dict[str, FieldView]) -> int:
+    """HBM bytes a layout-native decode step actually touches: assigned
+    pages (+ scale pages + the table) for paged fields, the physical
+    buffers for the rest.  Host-side accounting (reads the page table);
+    used by ``benchmarks/bench_inference``."""
+    total = 0
+    for v in views.values():
+        if isinstance(v, PagedView):
+            pt = np.asarray(v.page_table)
+            assigned = int(np.sum(np.unique(pt) != v.trash))
+            for pool in v._pool_children():
+                per_page = int(np.prod(pool.shape[v.lead + 1:])) * \
+                    jnp.dtype(pool.dtype).itemsize
+                lead = int(np.prod(pool.shape[:v.lead], dtype=np.int64)) \
+                    if v.lead else 1
+                total += lead * assigned * per_page
+            total += pt.size * pt.dtype.itemsize
+        else:
+            children = (v.q, v.scale) if isinstance(v, QuantView) \
+                else (v.data,)
+            total += sum(int(np.prod(c.shape)) *
+                         jnp.dtype(c.dtype).itemsize for c in children)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +449,11 @@ class DenseLayout:
                axes: Dict[str, int]) -> Dict[str, Any]:
         return dict(kv)
 
+    # -- KVView -------------------------------------------------------------
+    def view(self, kv: Dict[str, Any], bk: Dict[str, Any],
+             axes: Dict[str, int]) -> Dict[str, FieldView]:
+        return {f: DenseView(v, axes[f]) for f, v in kv.items()}
+
     # -- layout-owned bookkeeping ------------------------------------------
     def init_bookkeeping(self, slots: int) -> Dict[str, Any]:
         return {}
@@ -139,7 +463,7 @@ class DenseLayout:
 
     # -- slot surgery on the PHYSICAL representation -----------------------
     def _axis(self, field: str, axes: Dict[str, int]) -> int:
-        return axes[field]
+        return axes[_base_name(field)]
 
     def where_rows(self, rows: jax.Array, new_kv: Dict[str, Any],
                    old_kv: Dict[str, Any], bk: Dict[str, Any],
@@ -165,25 +489,13 @@ class DenseLayout:
 # ---------------------------------------------------------------------------
 
 
-def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-vector (last axis) int8 quantization."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
-                    keepdims=True) / 127.0
-    scale = jnp.where(scale == 0.0, 1.0, scale)
-    q = jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
-
-
 @dataclasses.dataclass(frozen=True)
 class QuantizedLayout(DenseLayout):
     """int8 KV + float32 per-vector scales (``f`` -> ``f__q``/``f__scale``).
 
     KV bytes shrink ~4x vs float32 (1 byte per element + 4/head_dim
-    scale overhead); decode kernels read the dequantized dense view, so
+    scale overhead); decode kernels read the int8 buffers through a
+    :class:`QuantView` (dequant fused in-kernel on the Pallas path), so
     accuracy is within the symmetric-int8 rounding error (~0.4% of each
     vector's max magnitude per element — the documented tolerance).
     """
@@ -212,15 +524,20 @@ class QuantizedLayout(DenseLayout):
                 out[f] = v
         return out
 
-    def _axis(self, field, axes):
-        for suffix in ("__q", "__scale"):
-            if field.endswith(suffix):
-                return axes[field[: -len(suffix)]]
-        return axes[field]
+    def view(self, kv, bk, axes):
+        out: Dict[str, FieldView] = {}
+        for f, v in kv.items():
+            if f.endswith("__q"):
+                base = f[:-3]
+                out[base] = QuantView(v, kv[base + "__scale"], axes[base],
+                                      self.dtype)
+            elif not f.endswith("__scale"):
+                out[f] = DenseView(v, axes[f])
+        return out
 
 
 # ---------------------------------------------------------------------------
-# Paged
+# Paged (optionally with int8 pages: the "paged_int8" composition)
 # ---------------------------------------------------------------------------
 
 
@@ -236,6 +553,14 @@ class PagedLayout(DenseLayout):
     ``layout__page_table`` (slots, pages_per_slot) in bookkeeping is
     shared by all paged fields.
 
+    ``quant_fields`` non-empty is the **paged_int8** composition: those
+    fields are first quantized (``f__q`` int8 + ``f__scale`` float32,
+    per-vector), then any with a length axis is paged — int8 pages in
+    the shared pool with the scales riding in a parallel scale pool.
+    Quantized fields WITHOUT a length axis (e.g. the tconst ctx/gen
+    windows) stay dense int8+scale buffers, as in
+    :class:`QuantizedLayout`.
+
     Constraint (asserted): a paged field's batch axis must immediately
     precede its length axis, so page gather/scatter is a single take /
     indexed set.
@@ -250,7 +575,12 @@ class PagedLayout(DenseLayout):
     max_len: int = 0
     slots: int = 0
     fields: Tuple[Tuple[str, int], ...] = ()
-    name = "paged"
+    quant_fields: Tuple[str, ...] = ()
+    dtype: str = "float32"
+
+    @property
+    def name(self) -> str:                             # type: ignore[override]
+        return "paged_int8" if self.quant_fields else "paged"
 
     @property
     def pages_per_slot(self) -> int:
@@ -266,10 +596,24 @@ class PagedLayout(DenseLayout):
         return self.pool_pages >= self.slots * self.pages_per_slot
 
     def _length_axis(self, field: str) -> Optional[int]:
+        base = _base_name(field)
         for f, la in self.fields:
-            if f == field:
+            if f == base:
                 return la
         return None
+
+    def pages_anything(self, kv_keys) -> bool:
+        """True if any physical kv field is actually stored in pages."""
+        return any(self._length_axis(f) is not None for f in kv_keys)
+
+    def _quant_pack(self, dense: Dict[str, Any]) -> Dict[str, Any]:
+        out = {}
+        for f, v in dense.items():
+            if f in self.quant_fields:
+                out[f + "__q"], out[f + "__scale"] = quantize_int8(v)
+            else:
+                out[f] = v
+        return out
 
     # -- bookkeeping --------------------------------------------------------
     def init_bookkeeping(self, slots):
@@ -297,12 +641,12 @@ class PagedLayout(DenseLayout):
     def pack(self, dense, bk, axes):
         pt = bk[PAGE_TABLE]
         out = {}
-        for f, v in dense.items():
+        for f, v in self._quant_pack(dense).items():
             la = self._length_axis(f)
             if la is None:
                 out[f] = v
                 continue
-            assert axes[f] == la - 1, (f, axes[f], la)
+            assert self._axis(f, axes) == la - 1, (f, axes, la)
             pages = self._to_pages(v, la)          # (..., B, pps, page, rest)
             pool_shape = (v.shape[:la - 1] + (self.pool_pages + 1, self.page)
                           + v.shape[la + 1:])
@@ -312,16 +656,43 @@ class PagedLayout(DenseLayout):
 
     def unpack(self, kv, bk, axes):
         pt = bk[PAGE_TABLE]
-        out = {}
+        staged = {}
         for f, v in kv.items():
             la = self._length_axis(f)
             if la is None:
-                out[f] = v
+                staged[f] = v
                 continue
-            gathered = jnp.take(v, pt, axis=la - 1)  # (..., B, pps, page, rest)
+            gathered = jnp.take(v, pt, axis=la - 1)  # (..., B, pps, page, r)
             merged = gathered.reshape(
                 gathered.shape[:la] + (-1,) + gathered.shape[la + 2:])
-            out[f] = jax.lax.slice_in_dim(merged, 0, self.max_len, axis=la)
+            staged[f] = jax.lax.slice_in_dim(merged, 0, self.max_len, axis=la)
+        out = {}
+        for f, v in staged.items():
+            if f.endswith("__q"):
+                out[f[:-3]] = dequantize_int8(v, staged[f[:-3] + "__scale"],
+                                              jnp.dtype(self.dtype))
+            elif not f.endswith("__scale"):
+                out[f] = v
+        return out
+
+    def view(self, kv, bk, axes):
+        pt = bk[PAGE_TABLE]
+        out: Dict[str, FieldView] = {}
+        for f, v in kv.items():
+            if f.endswith("__scale"):
+                continue
+            base = _base_name(f)
+            if f.endswith("__q"):
+                storage: FieldView = QuantView(v, kv[base + "__scale"],
+                                               axes[base], self.dtype)
+            else:
+                storage = DenseView(v, axes[f])
+            la = self._length_axis(f)
+            if la is None:
+                out[base] = storage
+            else:
+                out[base] = PagedView(storage, pt, self.page, self.max_len,
+                                      self.trash, lead=la - 1)
         return out
 
     # -- slot surgery -------------------------------------------------------
@@ -335,7 +706,8 @@ class PagedLayout(DenseLayout):
         for f in new_kv:
             la = self._length_axis(f)
             if la is None:
-                out[f] = where_rows(rows, new_kv[f], old_kv[f], axes[f])
+                out[f] = where_rows(rows, new_kv[f], old_kv[f],
+                                    self._axis(f, axes))
             else:
                 out[f] = where_rows(page_rows, new_kv[f], old_kv[f], la - 1)
         return out
@@ -343,13 +715,14 @@ class PagedLayout(DenseLayout):
     def write_slot(self, kv, bk, slot, dense_row, axes):
         """Page-map surgery: only the slot's own pages are touched."""
         pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)      # (pps,)
+        packed = self._quant_pack(dense_row)
         out = {}
         for f, dst in kv.items():
             la = self._length_axis(f)
-            src = dense_row[f].astype(dst.dtype)
+            src = packed[f].astype(dst.dtype)
             if la is None:
                 out[f] = jax.lax.dynamic_update_slice_in_dim(
-                    dst, src, slot, axis=axes[f])
+                    dst, src, slot, axis=self._axis(f, axes))
                 continue
             pages = self._to_pages(src, la)       # (..., 1, pps, page, rest)
             pages = jax.lax.index_in_dim(pages, 0, axis=la - 1,

@@ -289,21 +289,33 @@ def _layer_decode(layer: Params, x: jax.Array, cache_slice: Dict[str, Any],
                   cache_len: jax.Array, window: jax.Array, cfg: ModelConfig,
                   moe: bool, cos: jax.Array, sin: jax.Array
                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Per-layer decode over KVViews: ``cache_slice`` holds the per-layer
+    ``repro.models.layouts`` FieldViews, so the attention walks the
+    physical representation (paged pool / int8) directly."""
+    from repro.models import layouts as LT
     eps = cfg.norm_eps
     new_slice: Dict[str, Any] = {}
     xn = rmsnorm(layer["ln1"], x, eps)
-    if cfg.arch_type == "ssm":
-        st = {"ssm": cache_slice["ssm"], "conv": cache_slice["conv"]}
+
+    def run_ssm():
+        st = {"ssm": cache_slice["ssm"].dense(),
+              "conv": cache_slice["conv"].dense()}
         out, st = S.ssm_mixer(layer["ssm"], xn, cfg, state=st)
+        # the recurrent state is never quantized/paged (mutated every
+        # step), so a fresh DenseView is the identity re-wrap
+        return out, {"ssm": LT.DenseView(st["ssm"]),
+                     "conv": LT.DenseView(st["conv"])}
+
+    if cfg.arch_type == "ssm":
+        out, st = run_ssm()
         new_slice.update(st)
         return x + out, new_slice
-    out, k, v = A.decode_attend(
+    out, k_view, v_view = A.decode_attend_view(
         layer["attn"], xn, cache_slice["k"], cache_slice["v"], cache_len,
         cos, sin, cfg.logit_softcap, window)
-    new_slice["k"], new_slice["v"] = k, v
+    new_slice["k"], new_slice["v"] = k_view, v_view
     if cfg.hybrid_parallel:
-        st = {"ssm": cache_slice["ssm"], "conv": cache_slice["conv"]}
-        ssm_out, st = S.ssm_mixer(layer["ssm"], xn, cfg, state=st)
+        ssm_out, st = run_ssm()
         new_slice.update(st)
         out = (out + ssm_out) * 0.5
     x = x + out
@@ -311,11 +323,15 @@ def _layer_decode(layer: Params, x: jax.Array, cache_slice: Dict[str, Any],
     return x + f, new_slice
 
 
-def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
-                   cfg: ModelConfig,
-                   positions3: Optional[jax.Array] = None
-                   ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One-token decode.  token: (B,) -> (logits (B, V), cache)."""
+def lm_decode_step_views(params: Params, cache: Dict[str, Any],
+                         token: jax.Array, cfg: ModelConfig,
+                         positions3: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Layout-native one-token decode.  ``cache`` maps bookkeeping names
+    to plain arrays and KV names to FieldViews; under the paged layout a
+    step appends through the page table and attends page-by-page —
+    nothing materialises the dense (layers, B, max_len, KV, D) view.
+    token: (B,) -> (logits (B, V), cache)."""
     B = token.shape[0]
     dtype = jnp.dtype(cfg.dtype)
     x = E.embed_tokens(params["embed"], token[:, None], dtype)
@@ -326,16 +342,18 @@ def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
 
     cache = dict(cache)
     for i, layer in enumerate(params.get("dense_layers", [])):
-        sl = {"k": cache["dense_k"][i], "v": cache["dense_v"][i]}
+        sl = {"k": cache["dense_k"].layer(i), "v": cache["dense_v"].layer(i)}
         x, new = _layer_decode(layer, x, sl, cache["len"], windows[i], cfg,
                                False, cos, sin)
-        cache["dense_k"] = cache["dense_k"].at[i].set(new["k"])
-        cache["dense_v"] = cache["dense_v"].at[i].set(new["v"])
+        cache["dense_k"] = cache["dense_k"].set_layer(i, new["k"])
+        cache["dense_v"] = cache["dense_v"].set_layer(i, new["v"])
 
-    # fori_loop with the stacked cache as CARRY, updated in place — a
-    # lax.scan with cache slices as ys would stack a SECOND full cache as
-    # its output (measured: ~2x decode peak on llama3-405b decode_32k,
-    # EXPERIMENTS.md §Beyond-paper).
+    # fori_loop with the stacked cache VIEWS as CARRY, updated in place —
+    # a lax.scan with cache slices as ys would stack a SECOND full cache
+    # as its output (measured: ~2x decode peak on llama3-405b decode_32k,
+    # EXPERIMENTS.md §Beyond-paper).  Views are registered pytrees, so
+    # they ride the carry; ``set_layer`` writes only layer i's slice of
+    # the physical buffers.
     keys = []
     if cfg.arch_type != "ssm":
         keys += ["k", "v"]
@@ -346,10 +364,10 @@ def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     def body(i, carry):
         x, bufs = carry
         layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
-        slc = {k: bufs[k][i] for k in keys}
+        slc = {k: bufs[k].layer(i) for k in keys}
         x, new = _layer_decode(layer, x, slc, cache["len"],
                                scan_windows[i], cfg, cfg.is_moe, cos, sin)
-        bufs = {k: bufs[k].at[i].set(new[k]) for k in keys}
+        bufs = {k: bufs[k].set_layer(i, new[k]) for k in keys}
         return (x, bufs)
 
     n_scan = cfg.n_layers - n_dense
@@ -361,6 +379,21 @@ def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     logits = E.lm_head(params["embed"], x, cfg.logit_softcap)[:, 0]
     cache["len"] = cache["len"] + 1
     return logits, cache
+
+
+def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
+                   cfg: ModelConfig,
+                   positions3: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Dense-dict one-token decode: legacy entry point and the parity
+    oracle for the layout-native kernels (DenseView dispatch is
+    bit-identical to the historic dense path)."""
+    from repro.models import layouts as LT
+    views = {k: LT.DenseView(v, CACHE_BATCH_AXES[k]) if k in KV_KEYS else v
+             for k, v in cache.items()}
+    logits, out = lm_decode_step_views(params, views, token, cfg, positions3)
+    return logits, {k: v.dense() if isinstance(v, LT.FieldView) else v
+                    for k, v in out.items()}
 
 
 def lm_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,

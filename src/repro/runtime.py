@@ -1,7 +1,24 @@
-"""Global runtime flags (kernel routing, interpret mode)."""
+"""Global runtime flags (kernel routing, interpret mode).
+
+Environment overrides (read once at import) let CI exercise the Pallas
+kernels without code changes:
+
+* ``REPRO_USE_PALLAS=1``       — route hot attention paths via Pallas even
+  off-TPU (paired with interpret mode this is the ``pallas-interpret`` CI
+  job that runs the kernel parity suites on every PR).
+* ``REPRO_PALLAS_INTERPRET=0`` — force compiled Pallas (TPU only).
+"""
 from __future__ import annotations
 
 import dataclasses
+import os
+
+
+def _env_bool(name: str, default: bool) -> bool:
+    val = os.environ.get(name)
+    if val is None:
+        return default
+    return val.strip().lower() not in ("0", "false", "no", "")
 
 
 @dataclasses.dataclass
@@ -10,4 +27,7 @@ class Flags:
     pallas_interpret: bool = True     # CPU container: interpret=True
 
 
-flags = Flags()
+flags = Flags(
+    use_pallas=_env_bool("REPRO_USE_PALLAS", False),
+    pallas_interpret=_env_bool("REPRO_PALLAS_INTERPRET", True),
+)

@@ -4,13 +4,16 @@ The serving stack has three layers:
 
 * ``repro.models.api.DecodeAPI`` — the per-model decode protocol.  Its
   ``step`` fuses the TConst W_og-boundary resync ON DEVICE through the
-  compacted row-wise ``sync_rows`` (boundary rows are gathered, synced
-  at batch size 1 and scattered back — non-boundary rows are never
-  computed), and ``decode_chunk`` scans it so a chunk of k tokens is
-  ONE dispatch with zero per-token host round-trips.  The physical
-  cache representation is a pluggable ``repro.models.layouts`` backend:
-  dense, paged (page pool + per-slot page table) or int8 (+ per-vector
-  scales).
+  batched compacted ``sync_rows`` (ALL boundary rows' bookkeeping is
+  gathered in one dispatch, resynced at the bucketed pending count, and
+  the fresh KV written back through the layout — non-boundary rows are
+  never computed), and ``decode_chunk`` scans it so a chunk of k tokens
+  is ONE dispatch with zero per-token host round-trips.  The physical
+  cache representation is a pluggable ``repro.models.layouts`` backend
+  (dense / paged / int8 / paged_int8) that the decode kernels consume
+  LAYOUT-NATIVELY via per-field KVViews: paged pools are walked through
+  the page table in-kernel, int8 dequant rides the QK/AV loops, and no
+  step materialises the dense ``slots x max_len`` logical cache.
 * ``repro.serving.scheduler.SlotScheduler`` + ``repro.serving.session``
   — continuous batching: per-request sessions with their own prompt
   lengths / sampling params / EOS ids / streaming callbacks, admitted

@@ -83,7 +83,7 @@ class SlotScheduler:
         # paged layout stores nothing in pages and admission must not
         # gate on the pool.
         self._paged = isinstance(self.layout, LT.PagedLayout) and \
-            any(f in self.state.kv for f, _ in self.layout.fields)
+            self.layout.pages_anything(self.state.kv)
         self.free_pages: List[int] = []
         self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
         if self._paged:
