@@ -41,8 +41,13 @@ def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
     eng.generate(batch, GEN, record_stats=True)       # includes compile
     eng.stats.clear()
     eng.generate(batch, GEN, record_stats=True)       # timed run
-    hits = [s.seconds for s in eng.stats if s.kind == "hit"]
-    misses = [s.seconds for s in eng.stats if s.kind == "miss"]
+    # entries tagged compiled carry one-time jit cost: excluded from the
+    # reported numbers (the warm-up run above makes this a no-op here,
+    # but the tag keeps the JSON honest if the flow changes)
+    hits = [s.seconds for s in eng.stats
+            if s.kind == "hit" and not s.compiled]
+    misses = [s.seconds for s in eng.stats
+              if s.kind == "miss" and not s.compiled]
     prefill = [s.seconds for s in eng.stats if s.kind == "prefill"]
     # chunked decode: one lax.scan dispatch, resync fused on-device —
     # the serving path's zero-host-sync throughput (prefill excluded)
@@ -115,6 +120,70 @@ def _layout_sweep(api, params, emit) -> Dict:
     return out
 
 
+def _shared_prefix_scenario(api, params, kind, emit) -> Dict:
+    """Prefix sharing (CoW): S sessions x one common system prompt.
+    Reports the physical bytes the page tables reference (a shared page
+    is stored — and counted — ONCE) and warm admission latency, with
+    sharing on vs off, plus the S=1 baseline.  Acceptance: shared-prefix
+    bytes < 1.5x the single-session bytes for S=4, streams identical to
+    the no-sharing run."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+
+    S, page, gen, chunk = 4, 16, 4, 4
+    # prompt 104 = 96-token shared system prefix + 8-token tail: stable
+    # prefix (w_og=8 window part excluded) = 96 -> 6 shared pages, and
+    # tail+gen+chunk fit one private page -> 7 pages/session
+    rng = np.random.RandomState(7)
+    common = rng.randint(1, api.cfg.vocab_size, size=96).astype(np.int32)
+    prompts = [np.concatenate([common, rng.randint(
+        1, api.cfg.vocab_size, size=8).astype(np.int32)]) for _ in range(S)]
+    spec = LayoutSpec(kind=kind, page_size=page, pool_pages=28)
+
+    def serve(n_sessions, sharing):
+        sched = SlotScheduler(build_decode(api.cfg, spec), params,
+                              slots=S, max_len=128, chunk_size=chunk,
+                              prefix_sharing=sharing)
+        sessions = [sched.submit(Session(p, max_new_tokens=gen))
+                    for p in prompts[:n_sessions]]
+        sched.admit_pending()
+        bytes_admitted = sched.assigned_kv_bytes()
+        sched.run()
+        warm = [s.seconds for s in sched.admit_stats if not s.compiled]
+        return {
+            "assigned_kv_bytes": bytes_admitted,
+            "admit_warm_ms": 1e3 * float(np.median(warm)) if warm
+                             else float("nan"),
+            "streams": [s.tokens for s in sessions],
+        }
+
+    shared = serve(S, True)
+    solo = serve(1, True)
+    noshare = serve(S, False)
+    ratio = shared["assigned_kv_bytes"] / solo["assigned_kv_bytes"]
+    identical = shared["streams"] == noshare["streams"]
+    row = {
+        "sessions": S,
+        "shared_prefix_assigned_kv_bytes": shared["assigned_kv_bytes"],
+        "no_sharing_assigned_kv_bytes": noshare["assigned_kv_bytes"],
+        "single_session_assigned_kv_bytes": solo["assigned_kv_bytes"],
+        "shared_over_single_ratio": ratio,
+        "admit_warm_ms_sharing": shared["admit_warm_ms"],
+        "admit_warm_ms_no_sharing": noshare["admit_warm_ms"],
+        "streams_identical_to_no_sharing": identical,
+    }
+    emit(f"prefix_sharing/{kind}/assigned_kv_bytes",
+         shared["assigned_kv_bytes"],
+         f"S={S} shared prompt; no-sharing pays "
+         f"{noshare['assigned_kv_bytes']}")
+    emit(f"prefix_sharing/{kind}/shared_over_single_ratio", ratio,
+         "acceptance: < 1.5 for S=4 (shared prefix stored once)")
+    emit(f"prefix_sharing/{kind}/streams_identical", float(identical),
+         "1.0 = token-identical to the no-sharing run")
+    return row
+
+
 def run(emit) -> None:
     variants = {
         "base": reduced(get_config("tconst_41m"), dtype="float32",
@@ -125,6 +194,7 @@ def run(emit) -> None:
     }
     results: Dict[str, List[Dict]] = {}
     layouts: Dict[str, Dict] = {}
+    prefix_sharing: Dict[str, Dict] = {}
     for name, cfg in variants.items():
         api = build_model(cfg)
         params = api.init(jax.random.PRNGKey(0))
@@ -143,6 +213,12 @@ def run(emit) -> None:
             layouts[name] = _layout_sweep(api, params,
                                           lambda k, v, d="": emit(
                                               f"{name}/{k}", v, d))
+        if name == "tlin":
+            # prefix sharing needs fields that actually live in pages:
+            # tlin's O(N) history KV (pure-tconst KV is already O(1))
+            prefix_sharing = {
+                kind: _shared_prefix_scenario(api, params, kind, emit)
+                for kind in ("paged", "paged_int8")}
 
     # derived paper claims ---------------------------------------------------
     tc = results["tconst"]
@@ -168,6 +244,10 @@ def run(emit) -> None:
         # resync cost for tconst/tlin), cache bytes, chunked tok/s
         "variants": results,
         "layouts": layouts,
+        # S sessions x one system prompt: shared prefix pages stored
+        # once (assigned_kv_bytes), streams identical, warm admission
+        # latency with/without sharing (compile-tagged entries excluded)
+        "prefix_sharing": prefix_sharing,
         "derived": {
             "tconst_hit_flatness": flat,
             "tconst_cache_O1_ratio": cache_ratio,

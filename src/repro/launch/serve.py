@@ -10,6 +10,13 @@ bytes (sessions mode only — the scheduler is the page allocator).
 ``int8`` stores KV quantized with per-vector scales (~4x smaller,
 tokens may differ within the documented tolerance).
 
+``--prefix-sharing`` (sessions mode, paged layouts) turns on the
+refcounted content-addressed page map: every session gets the SAME
+system prompt plus a distinct tail, and sessions admitted while the
+prefix is resident map its pages instead of re-writing them — the
+shared prefix is stored once, writes copy-on-write (a page is writable
+iff its refcount is 1).
+
 Uniform batch (benchmark-style, same-length prompts)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
@@ -21,6 +28,12 @@ it against single-session generation)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
       --sessions 3 --gen 24 --slots 2 --layout paged --pool-pages 12
+
+Shared-system-prompt demo (prefix sharing / CoW)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
+      --sessions 4 --slots 4 --gen 16 --prompt-len 64 \\
+      --layout paged --page-size 16 --prefix-sharing
 """
 from __future__ import annotations
 
@@ -44,11 +57,29 @@ def _layout_spec(args) -> LayoutSpec:
                       pool_pages=args.pool_pages or None)
 
 
+def _session_prompt_lens(args) -> list:
+    """Prompt lengths the sessions demo will submit.  Prefix sharing
+    uses one common system prompt + equal-length distinct tails (equal
+    lengths keep greedy parity with the solo runs bitwise-exact);
+    otherwise lengths vary per session to exercise staggered phases."""
+    if args.prefix_sharing:
+        return [args.prompt_len + 8] * args.sessions
+    return [args.prompt_len + 5 * i for i in range(args.sessions)]
+
+
 def validate_layout_args(ap, cfg, args, max_len: int) -> None:
     """Startup validation of the paged-layout knobs against the model
     config and launch geometry, so a mis-sized pool fails with a clear
     message instead of a shape crash (or a scheduler rejection) at
     first admission."""
+    if args.prefix_sharing:
+        if not args.sessions:
+            ap.error("--prefix-sharing needs --sessions N — the session "
+                     "scheduler owns the prefix map and the page "
+                     "refcounts (uniform batch has no admission path)")
+        if args.layout not in ("paged", "paged_int8"):
+            ap.error(f"--prefix-sharing shares pool PAGES; --layout "
+                     f"{args.layout} has none (use paged or paged_int8)")
     if args.layout not in ("paged", "paged_int8"):
         return
     if cfg.attention_mode == "tconst" and cfg.arch_type not in \
@@ -77,7 +108,8 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             f"cannot place rows in an under-sized pool); add --sessions N "
             f"or drop --pool-pages")
     # largest session this launcher will submit must be admissible
-    worst_prompt = args.prompt_len + 5 * (args.sessions - 1)
+    worst_prompt = max(_session_prompt_lens(args)) if args.sessions \
+        else args.prompt_len
     worst_need = -(-(worst_prompt + args.gen + args.chunk)
                    // args.page_size)
     if worst_need > args.pool_pages:
@@ -94,15 +126,25 @@ def run_sessions(cfg, api, params, args) -> int:
     admitted at staggered times into a fixed-slot batch; each streams its
     tokens and must match its own single-session generation."""
     rng = np.random.RandomState(args.seed)
-    prompts = [rng.randint(1, cfg.vocab_size,
-                           size=args.prompt_len + 5 * i).astype(np.int32)
-               for i in range(args.sessions)]
+    lens = _session_prompt_lens(args)
+    if args.prefix_sharing:
+        # shared system prompt + distinct tails: the prefix map stores
+        # the common pages once, refcounted across sessions
+        common = rng.randint(1, cfg.vocab_size,
+                             size=args.prompt_len).astype(np.int32)
+        prompts = [np.concatenate([common, rng.randint(
+            1, cfg.vocab_size, size=n - args.prompt_len).astype(np.int32)])
+            for n in lens]
+    else:
+        prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in lens]
 
     decode = build_decode(cfg, _layout_spec(args))
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
-                          chunk_size=args.chunk, seed=args.seed)
+                          chunk_size=args.chunk, seed=args.seed,
+                          prefix_sharing=args.prefix_sharing)
 
     def stream(sess, tok):
         print(f"[serve]   session {sess.sid}: token[{len(sess.tokens) - 1}]"
@@ -117,8 +159,23 @@ def run_sessions(cfg, api, params, args) -> int:
             eos_id=args.eos if args.eos >= 0 else None,
             on_token=stream if args.verbose else None)))
         # staggered admission: run one chunk between submissions so slots
-        # sit at different W_og resync phases
-        sched.step()
+        # sit at different W_og resync phases.  Prefix sharing admits
+        # everything up front instead — sessions in flight together keep
+        # the shared prefix resident and refcounted.
+        if not args.prefix_sharing:
+            sched.step()
+    if args.prefix_sharing:
+        sched.admit_pending()
+        if sched.prefix_sharing:
+            refs = sched.page_refcounts()
+            print(f"[serve] prefix sharing: {int((refs > 1).sum())} shared "
+                  f"pages (refcount > 1), {int((refs > 0).sum())} assigned "
+                  f"of {sched.layout.pool_pages} pool pages; assigned KV "
+                  f"bytes (shared prefix counted once): "
+                  f"{sched.assigned_kv_bytes()}")
+        else:
+            print("[serve] note: this config stores nothing in pages — "
+                  "prefix sharing is inert (see the paged-layout note)")
     sched.run()
     dt = time.time() - t0
 
@@ -129,10 +186,16 @@ def run_sessions(cfg, api, params, args) -> int:
           f"{args.slots} slots in {dt:.2f}s ({total / dt:.1f} tok/s)")
     chunks = [s for s in sched.stats if s.kind == "chunk"]
     if chunks:
-        # median, not mean: the first chunk pays the one-time jit compile
+        # compiled entries carry the one-time jit cost; report without them
+        warm = [s.seconds for s in chunks if not s.compiled] or \
+            [s.seconds for s in chunks]
         print(f"[serve] decode chunks: n={len(chunks)} "
               f"({args.chunk} tokens/dispatch, zero per-token host syncs) "
-              f"median={np.median([s.seconds for s in chunks]) * 1e3:.2f}ms")
+              f"median={np.median(warm) * 1e3:.2f}ms")
+    admits = [s.seconds for s in sched.admit_stats if not s.compiled]
+    if admits:
+        print(f"[serve] admissions: n={len(sched.admit_stats)} "
+              f"warm median={np.median(admits) * 1e3:.2f}ms")
     print(f"[serve] KV-cache bytes ({args.slots} slots, "
           f"{sched.layout.name} layout): {sched.kv_bytes()}")
 
@@ -178,6 +241,11 @@ def main(argv=None) -> int:
     ap.add_argument("--eos", type=int, default=-1,
                     help="end-of-sequence token id for sessions mode "
                          "(< 0 disables early termination)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted content-addressed page sharing "
+                         "(sessions mode, paged layouts): sessions get a "
+                         "common system prompt whose pages are stored "
+                         "once and mapped copy-on-write")
     ap.add_argument("--sessions", type=int, default=0,
                     help="serve N streaming sessions (staggered admission, "
                          "variable prompt lengths) instead of one batch")
@@ -195,7 +263,7 @@ def main(argv=None) -> int:
 
     if args.sessions:
         eff_max_len = args.max_len or \
-            (args.prompt_len + 5 * (args.sessions - 1) + args.gen + 64)
+            (max(_session_prompt_lens(args)) + args.gen + 64)
     else:
         eff_max_len = args.max_len or (args.prompt_len + args.gen + 64)
     validate_layout_args(ap, cfg, args, eff_max_len)

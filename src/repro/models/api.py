@@ -212,6 +212,15 @@ class DecodeState:
         arrays only.  Compare against :meth:`dense_logical_bytes`."""
         return LT.view_touched_bytes(self.kv_views())
 
+    def assigned_kv_bytes(self) -> int:
+        """KV bytes the live page tables actually reference: paged
+        fields count their unique assigned pages — a prefix-SHARED page
+        (mapped by several slots) is stored and counted ONCE — while
+        non-paged fields report their physical buffers.  This is the
+        prefix-sharing headline: physical cache scaling with *distinct*
+        context rather than slot count.  Host-side; concrete arrays."""
+        return LT.assigned_kv_bytes(self.kv_views())
+
     def dense_logical_bytes(self) -> int:
         """Bytes of the dense LOGICAL kv view — what a ``merged()``-based
         step would materialise and read per token (the pre-KVView cost
@@ -225,11 +234,17 @@ class DecodeState:
         return leaf.shape[self.axes[name]]
 
     # -- slot surgery -------------------------------------------------------
-    def with_slot(self, slot: jax.Array, row: "DecodeState") -> "DecodeState":
+    def with_slot(self, slot: jax.Array, row: "DecodeState",
+                  page_write_mask: Optional[jax.Array] = None
+                  ) -> "DecodeState":
         """Scatter a single-row state (batch size 1, dense layout) into
         slot ``slot``.  Bookkeeping is a per-field row write; kv goes
         through the layout (paged: page-map surgery touching only the
-        slot's own pages)."""
+        slot's own pages).  ``page_write_mask`` (pages_per_slot,) bool
+        restricts the paged write to the UNSHARED tail of the slot's
+        page table — the copy-on-write admission contract: a page whose
+        content is already resident (prefix sharing, refcount > 1) is
+        mapped, never rewritten."""
         bk = dict(self.bookkeeping)
         for name, src in row.bookkeeping.items():
             if name.startswith(LT.LAYOUT_BK_PREFIX):
@@ -239,7 +254,8 @@ class DecodeState:
                 axis=self.axes[name])
         dense_row = row.layout.unpack(row.kv, row.bookkeeping, row.axes)
         kv = self.layout.write_slot(self.kv, self.bookkeeping, slot,
-                                    dense_row, self.axes)
+                                    dense_row, self.axes,
+                                    page_mask=page_write_mask)
         return DecodeState(kv, bk, self.axes, self.layout)
 
     def where_rows(self, rows: jax.Array, other: "DecodeState"
@@ -345,10 +361,17 @@ class DecodeAPI:
 
     def prefill_into_slot(self, params, state: DecodeState, slot: jax.Array,
                           tokens: jax.Array,
-                          extras: Optional[Dict[str, Any]] = None
+                          extras: Optional[Dict[str, Any]] = None,
+                          page_write_mask: Optional[jax.Array] = None
                           ) -> Tuple[jax.Array, DecodeState]:
         """Admit one request: prefill prompt ``tokens`` (L,) and scatter
-        the resulting row into ``slot``.  Returns (logits (V,), state)."""
+        the resulting row into ``slot``.  Returns (logits (V,), state).
+
+        ``page_write_mask`` (pages_per_slot,) bool is the TAIL-ONLY
+        prefill entry for prefix sharing: table entries where the mask
+        is False (pages adopted from the prefix map, content already
+        resident) are excluded from the paged scatter, so admission
+        writes only the unshared tail of the prompt."""
         raise NotImplementedError
 
     def raw_step(self, params, state: DecodeState, token: jax.Array
@@ -373,6 +396,24 @@ class DecodeAPI:
         masked rows means zero sync work — this is the on-device
         decision, no host round-trip."""
         return self.sync_rows(params, state, self.sync_mask(state))
+
+    # prefix-sharing surface (host-side hooks for the scheduler) ------------
+    def stable_prefix_len(self, prompt_len: int) -> int:
+        """Longest prompt prefix whose paged KV is fully written at
+        admission AND a pure function of the prompt token ids — only
+        pages wholly inside it may enter the prefix-sharing map.  Models
+        with a growing positional KV write every prompt position at
+        prefill, so the whole prompt is stable."""
+        return prompt_len
+
+    def sync_anticipated(self, state: DecodeState, n_steps: int
+                         ) -> np.ndarray:
+        """Host-side (B,) bool: slots whose periodic O(N) sync MAY fire
+        within the next ``n_steps`` decode steps (conservative over-
+        approximation is fine — an early copy-on-write fork loses some
+        sharing, never correctness).  Models without a periodic sync
+        never rewrite resident pages, so nothing is anticipated."""
+        return np.zeros((state.slots,), bool)
 
     # fused step ------------------------------------------------------------
     def step(self, params, state: DecodeState, token: jax.Array
@@ -466,11 +507,30 @@ class TConstDecode(DecodeAPI):
         self._check_prefill_layout(cache, max_len)
         return logits, self._wrap_new(cache, max_len)
 
-    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None,
+                          page_write_mask=None):
         max_len = state.bookkeeping["tokens"].shape[1]
         logits, row = TC.prefill(params, tokens[None], self.cfg, max_len,
                                  mode=self.mode)
-        return logits[0], state.with_slot(slot, self._row_state(row))
+        return logits[0], state.with_slot(slot, self._row_state(row),
+                                          page_write_mask=page_write_mask)
+
+    def stable_prefix_len(self, prompt_len: int) -> int:
+        """The trailing 1..W_og prompt tokens live in the dense gen
+        window, not the paged history KV, until the first resync — only
+        the hist_len prefix is resident in pages at admission."""
+        g0 = ((prompt_len - 1) % self.cfg.tconst.w_og) + 1
+        return prompt_len - g0
+
+    def sync_anticipated(self, state, n_steps):
+        """A slot resyncs when gen_len reaches W_og; gen_len grows by at
+        most one per decode step, so gen_len + n_steps >= W_og bounds
+        every resync the next chunk can fire (EOS-frozen slots are
+        excluded — they are evicted at the boundary, never synced)."""
+        gen = np.asarray(state.bookkeeping["gen_len"])
+        done = np.asarray(state.bookkeeping["done"])
+        return np.logical_and(gen + n_steps >= self.cfg.tconst.w_og,
+                              np.logical_not(done))
 
     def raw_step(self, params, state, token):
         logits, out = TC.decode_step_views(params, state.decode_views(),
@@ -546,7 +606,8 @@ class DenseDecode(DecodeAPI):
         self._check_prefill_layout(cache, max_len)
         return logits, self._wrap_new(cache, max_len)
 
-    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None,
+                          page_write_mask=None):
         extras = extras or {}
         max_len = self._max_len(state, tokens.shape[0])
         logits, cache = LM.lm_prefill(
@@ -555,7 +616,8 @@ class DenseDecode(DecodeAPI):
             extras["vision_embeds"][None],
             vision_mask=None if "vision_mask" not in extras else
             extras["vision_mask"][None])
-        return logits[0], state.with_slot(slot, self._row_state(cache))
+        return logits[0], state.with_slot(slot, self._row_state(cache),
+                                          page_write_mask=page_write_mask)
 
     def raw_step(self, params, state, token):
         logits, out = LM.lm_decode_step_views(params, state.decode_views(),
@@ -587,7 +649,8 @@ class EncDecDecode(DecodeAPI):
         self._check_prefill_layout(cache, max_len)
         return logits, self._wrap_new(cache, max_len)
 
-    def prefill_into_slot(self, params, state, slot, tokens, extras=None):
+    def prefill_into_slot(self, params, state, slot, tokens, extras=None,
+                          page_write_mask=None):
         if not extras or "audio_feats" not in extras:
             raise ValueError(
                 "encoder-decoder sessions need extras={'audio_feats': "
@@ -596,7 +659,8 @@ class EncDecDecode(DecodeAPI):
         logits, cache = ED.encdec_prefill(
             params, tokens[None], extras["audio_feats"][None], self.cfg,
             max_len)
-        return logits[0], state.with_slot(slot, self._row_state(cache))
+        return logits[0], state.with_slot(slot, self._row_state(cache),
+                                          page_write_mask=page_write_mask)
 
     def raw_step(self, params, state, token):
         logits, out = ED.encdec_decode_step_views(params,

@@ -402,23 +402,52 @@ def absorb_views(views: Dict[str, FieldView]) -> Dict[str, jax.Array]:
     return kv
 
 
+def _paged_assigned_bytes(v: "PagedView") -> int:
+    """Bytes of the UNIQUE assigned pages of one paged field (+ scale
+    pages).  ``np.unique`` over the table means a page mapped by several
+    slots (prefix sharing) is counted ONCE — the physical truth."""
+    pt = np.asarray(v.page_table)
+    assigned = int(np.sum(np.unique(pt) != v.trash))
+    total = 0
+    for pool in v._pool_children():
+        per_page = int(np.prod(pool.shape[v.lead + 1:])) * \
+            jnp.dtype(pool.dtype).itemsize
+        lead = int(np.prod(pool.shape[:v.lead], dtype=np.int64)) \
+            if v.lead else 1
+        total += lead * assigned * per_page
+    return total
+
+
 def view_touched_bytes(views: Dict[str, FieldView]) -> int:
     """HBM bytes a layout-native decode step actually touches: assigned
     pages (+ scale pages + the table) for paged fields, the physical
-    buffers for the rest.  Host-side accounting (reads the page table);
-    used by ``benchmarks/bench_inference``."""
+    buffers for the rest.  Shared pages (prefix sharing: one page mapped
+    by several slots' tables) are counted once.  Host-side accounting
+    (reads the page table); used by ``benchmarks/bench_inference``."""
     total = 0
     for v in views.values():
         if isinstance(v, PagedView):
+            total += _paged_assigned_bytes(v)
             pt = np.asarray(v.page_table)
-            assigned = int(np.sum(np.unique(pt) != v.trash))
-            for pool in v._pool_children():
-                per_page = int(np.prod(pool.shape[v.lead + 1:])) * \
-                    jnp.dtype(pool.dtype).itemsize
-                lead = int(np.prod(pool.shape[:v.lead], dtype=np.int64)) \
-                    if v.lead else 1
-                total += lead * assigned * per_page
             total += pt.size * pt.dtype.itemsize
+        else:
+            children = (v.q, v.scale) if isinstance(v, QuantView) \
+                else (v.data,)
+            total += sum(int(np.prod(c.shape)) *
+                         jnp.dtype(c.dtype).itemsize for c in children)
+    return total
+
+
+def assigned_kv_bytes(views: Dict[str, FieldView]) -> int:
+    """KV bytes actually REFERENCED by the live page tables: paged fields
+    count their unique assigned pages (a prefix-shared page is stored —
+    and counted — once), non-paged fields their full physical buffers.
+    The prefix-sharing headline metric: physical cache that scales with
+    *distinct* context, not with slot count."""
+    total = 0
+    for v in views.values():
+        if isinstance(v, PagedView):
+            total += _paged_assigned_bytes(v)
         else:
             children = (v.q, v.scale) if isinstance(v, QuantView) \
                 else (v.data,)
@@ -473,8 +502,12 @@ class DenseLayout:
 
     def write_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
                    slot: jax.Array, dense_row: Dict[str, Any],
-                   axes: Dict[str, int]) -> Dict[str, Any]:
-        """Scatter a 1-slot dense row into physical slot ``slot``."""
+                   axes: Dict[str, int],
+                   page_mask: Optional[jax.Array] = None) -> Dict[str, Any]:
+        """Scatter a 1-slot dense row into physical slot ``slot``.
+        ``page_mask`` is a paged-layout concern (tail-only admission
+        writes under prefix sharing) — ignored for non-paged layouts,
+        whose slots are exclusively owned by construction."""
         packed = self.pack(dense_row, bk, axes)
         out = {}
         for f, dst in kv.items():
@@ -712,9 +745,17 @@ class PagedLayout(DenseLayout):
                 out[f] = where_rows(page_rows, new_kv[f], old_kv[f], la - 1)
         return out
 
-    def write_slot(self, kv, bk, slot, dense_row, axes):
-        """Page-map surgery: only the slot's own pages are touched."""
+    def write_slot(self, kv, bk, slot, dense_row, axes, page_mask=None):
+        """Page-map surgery: only the slot's own pages are touched.
+
+        ``page_mask`` (pps,) bool selects which of the slot's table
+        entries are written; masked-out entries are redirected to the
+        TRASH page, so a prefix-SHARED page (refcount > 1, content
+        already resident and correct) is never written by admission —
+        the copy-on-write contract's tail-only prefill write."""
         pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)      # (pps,)
+        if page_mask is not None:
+            pt_row = jnp.where(page_mask, pt_row, self.trash)
         packed = self._quant_pack(dense_row)
         out = {}
         for f, dst in kv.items():
@@ -729,4 +770,24 @@ class PagedLayout(DenseLayout):
                                          keepdims=False)
             idx = (slice(None),) * (la - 1) + (pt_row,)
             out[f] = dst.at[idx].set(pages)
+        return out
+
+    # -- copy-on-write forking ----------------------------------------------
+    def fork_pages(self, kv: Dict[str, Any], src: jax.Array,
+                   dst: jax.Array) -> Dict[str, Any]:
+        """Device-side page fork: copy pool pages ``src`` (k,) onto fresh
+        pool pages ``dst`` (k,) for EVERY paged field (int8 pools carry
+        their scale pool along).  The scheduler calls this before a slot
+        that references shared (refcount > 1) pages can write them — the
+        chunk/admission-boundary copy-on-write.  Pad ``src``/``dst``
+        with the trash index for a fixed arity (trash -> trash copies
+        are dead writes), so the jitted fork compiles once."""
+        out = dict(kv)
+        for f, pool in kv.items():
+            la = self._length_axis(f)
+            if la is None:
+                continue
+            taken = jnp.take(pool, src, axis=la - 1)
+            ix = (slice(None),) * (la - 1) + (dst,)
+            out[f] = pool.at[ix].set(taken)
         return out

@@ -48,9 +48,24 @@ from repro.models.api import ModelAPI, build_decode, decode_chunk
 
 @dataclasses.dataclass
 class StepStats:
-    kind: str              # "prefill" | "hit" | "miss" | "chunk"
+    kind: str              # "prefill" | "hit" | "miss" | "chunk" | "admit"
     seconds: float
     tokens: int = 1        # tokens produced by this entry (chunks: many)
+    # True when this entry's wall-clock includes the one-time jit compile
+    # of its dispatch (first chunk of a shape, first prefill of a prompt
+    # length, ...).  Throughput aggregation must exclude these entries
+    # (or medianize) — BENCH_inference.json numbers do.
+    compiled: bool = False
+
+
+def tag_compiled(warm: set, kind: str, sig: Any = None) -> bool:
+    """True exactly for the first dispatch of each (kind, signature) —
+    the one whose wall-clock includes the jit compile.  One rule shared
+    by the Engine and the SlotScheduler so the tagging cannot drift."""
+    key = (kind, sig)
+    fresh = key not in warm
+    warm.add(key)
+    return fresh
 
 
 class Engine:
@@ -72,6 +87,16 @@ class Engine:
             functools.partial(decode_chunk, self.decode),
             static_argnames=("n_steps",))
         self.stats: List[StepStats] = []
+        self._warm: set = set()    # (kind, shape-signature) seen -> compiled
+
+    def _stat(self, kind: str, seconds: float, sig: Any = None,
+              tokens: int = 1) -> None:
+        """Record a StepStats entry, tagging the first dispatch of each
+        (kind, signature) as ``compiled`` so aggregations can drop the
+        one-time jit cost."""
+        self.stats.append(StepStats(kind, seconds, tokens=tokens,
+                                    compiled=tag_compiled(self._warm, kind,
+                                                          sig)))
 
     def _select(self, logits: jax.Array) -> jax.Array:
         if self.temperature <= 0.0:
@@ -89,7 +114,8 @@ class Engine:
         logits, state = jax.block_until_ready(
             self._prefill(self.params, batch))
         if record_stats:
-            self.stats.append(StepStats("prefill", time.perf_counter() - t0))
+            self._stat("prefill", time.perf_counter() - t0,
+                       sig=batch["tokens"].shape)
         token = self._select(logits)
         if record_stats:
             return self._generate_instrumented(state, token, n_tokens)
@@ -118,12 +144,11 @@ class Engine:
                 t0 = time.perf_counter()
                 state = jax.block_until_ready(
                     self._sync(self.params, state))
-                self.stats.append(
-                    StepStats("miss", time.perf_counter() - t0))
+                self._stat("miss", time.perf_counter() - t0)
             t0 = time.perf_counter()
             logits, state = jax.block_until_ready(
                 self._step(self.params, state, token))
-            self.stats.append(StepStats("hit", time.perf_counter() - t0))
+            self._stat("hit", time.perf_counter() - t0)
             token = self._select(logits)
             out.append(token)
         return np.stack([np.asarray(t) for t in out], axis=1)

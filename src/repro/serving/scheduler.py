@@ -11,9 +11,24 @@ The scheduler owns one fixed-shape multi-slot ``DecodeState`` and admits
   layout the scheduler is also the page allocator: admission assigns
   just enough pool pages to cover the session's prompt + budget (the
   page table is host-side slot surgery), and a session whose pages
-  aren't available yet simply waits in the queue — so a pool sized
-  well below ``slots * max_len`` serves short sessions at a fraction
-  of the dense footprint.
+  aren't available yet waits in the queue — later queued sessions that
+  DO fit are admitted past it (bounded skip-ahead, so the head cannot
+  be starved) — so a pool sized well below ``slots * max_len`` serves
+  short sessions at a fraction of the dense footprint.
+* **prefix sharing (copy-on-write)** — with ``prefix_sharing=True`` the
+  scheduler keeps a host-side content-addressed map from page-aligned
+  prompt-token chunks to resident pool pages, with per-page refcounts.
+  A session whose prompt prefix matches resident pages MAPS them into
+  its ``layout__page_table`` instead of re-allocating and re-writing
+  them (the admission scatter is masked to the unshared tail), so S
+  sessions sharing a system prompt store its KV once.  Pages are
+  writable only at refcount 1: before a chunk in which a slot's
+  periodic resync may fire (``DecodeAPI.sync_anticipated``), its shared
+  pages are FORKED to fresh pool pages (device-side copy, table
+  surgery) — token appends never target shared pages by construction
+  (only pages wholly inside ``stable_prefix_len`` enter the map).
+  ``_release`` decrements refcounts; a page returns to ``free_pages``
+  (and leaves the map) only at refcount 0.
 * **decode** — all slots advance together in chunks of ``chunk_size``
   tokens.  A chunk is ONE jitted ``lax.scan`` over the fused step: the
   TConst W_og resync fires on device through the compacted row-wise
@@ -23,21 +38,25 @@ The scheduler owns one fixed-shape multi-slot ``DecodeState`` and admits
   sampled ids).  A slot that samples its session's EOS id sets the
   on-device ``done`` flag and is frozen for the rest of the chunk.
 * **retire** — a session that exhausts its budget or hits EOS frees its
-  slot at the chunk boundary (the slot is cleared so stale phase
-  counters cannot re-trigger syncs; paged: its pages return to the
-  free pool).
+  slot at the chunk boundary (the slot's page-table row is retargeted
+  at TRASH before the clearing write, so clearing can never land on a
+  page another slot still references; pages whose refcount hits 0
+  return to the free pool).
 
-Chunk timings are recorded as ``StepStats(kind="chunk")`` entries; the
-first entry includes the one-time jit compile of the chunked scan, so
-aggregate with a median (or drop it) when reporting dispatch cost.
+Chunk timings are recorded as ``StepStats(kind="chunk")`` entries and
+admissions as ``StepStats(kind="admit")`` in ``admit_stats``; entries
+whose wall-clock includes a one-time jit compile carry
+``compiled=True`` so aggregations (``benchmarks/bench_inference``)
+can exclude them.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import hashlib
 import time
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,12 +64,15 @@ import numpy as np
 
 from repro.models import layouts as LT
 from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
+from repro.serving.engine import StepStats, tag_compiled
 from repro.serving.session import Session
 
 
 class SlotScheduler:
     def __init__(self, decode: DecodeAPI, params: Any, slots: int,
-                 max_len: int, chunk_size: int = 8, seed: int = 0):
+                 max_len: int, chunk_size: int = 8, seed: int = 0,
+                 prefix_sharing: bool = False,
+                 max_head_skips: Optional[int] = None):
         # accept a ModelAPI facade too (duck-typed .decode)
         if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
             decode = decode.decode
@@ -76,21 +98,42 @@ class SlotScheduler:
         self._clear = jax.jit(lambda st, slot, row: st.with_slot(slot, row))
 
         # paged layout: the scheduler owns page assignment.  Start from an
-        # all-TRASH table (unique real-page ownership is the invariant the
-        # pack/scatter relies on) with every pool page free.  Page
-        # accounting only applies when the cache actually HAS paged
-        # fields — for caches that are already O(1) (pure tconst) the
-        # paged layout stores nothing in pages and admission must not
-        # gate on the pool.
+        # all-TRASH table (a real page is writable iff its refcount is 1 —
+        # the invariant the pack/scatter and the CoW fork rely on) with
+        # every pool page free.  Page accounting only applies when the
+        # cache actually HAS paged fields — for caches that are already
+        # O(1) (pure tconst) the paged layout stores nothing in pages and
+        # admission must not gate on the pool.
         self._paged = isinstance(self.layout, LT.PagedLayout) and \
             self.layout.pages_anything(self.state.kv)
         self.free_pages: List[int] = []
         self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        self._page_ref = np.zeros((0,), np.int32)
         if self._paged:
             trash = jnp.full((slots, self.layout.pages_per_slot),
                              self.layout.trash, jnp.int32)
             self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: trash})
             self.free_pages = list(range(self.layout.pool_pages))
+            self._page_ref = np.zeros((self.layout.pool_pages,), np.int32)
+            self._fork = jax.jit(lambda st, src, dst: dataclasses.replace(
+                st, kv=self.layout.fork_pages(st.kv, src, dst)))
+
+        self.prefix_sharing = bool(prefix_sharing) and self._paged
+        self._prefix_map: Dict[bytes, int] = {}   # chunk-chain key -> page
+        self._page_key: Dict[int, bytes] = {}     # page -> its map key
+        # a resyncing model (tconst/tlin) eventually FORKS every page it
+        # adopted, so a sharing admission must reserve that headroom up
+        # front — otherwise admission could overcommit the pool into a
+        # state where no slot can ever fork (LM families never fork)
+        self._fork_reserve = self.prefix_sharing and bool(
+            np.any(self.decode.sync_anticipated(self.state, 1 << 30)))
+        self._key_cache: Dict[int, List[bytes]] = {}   # sid -> chunk keys
+        # bounded skip-ahead: how many sessions may be admitted past a
+        # page-blocked queue head before admission stops overtaking it
+        # (freed pages then necessarily reach the head: eventual FIFO)
+        self.max_head_skips = 4 * slots if max_head_skips is None \
+            else max_head_skips
+        self._head_skips = 0
 
         self.key = jax.random.PRNGKey(seed)
         self.last_token = jnp.zeros((slots,), jnp.int32)
@@ -99,7 +142,9 @@ class SlotScheduler:
         self.active = np.zeros((slots,), bool)
         self.sessions: List[Optional[Session]] = [None] * slots
         self.pending: Deque[Session] = collections.deque()
-        self.stats: List["StepStats"] = []
+        self.stats: List[StepStats] = []
+        self.admit_stats: List[StepStats] = []
+        self._warm: set = set()       # (kind, signature) -> compiled tag
 
     # ------------------------------------------------------------------
     def _pages_needed(self, session: Session) -> int:
@@ -119,6 +164,9 @@ class SlotScheduler:
                 f"session {session.sid}: prompt {len(session.prompt)} + "
                 f"max_new_tokens {session.max_new_tokens} (+ chunk "
                 f"{self.chunk_size}) exceeds max_len {self.max_len}")
+        # total-pool capacity check: a session needing more pages than the
+        # POOL holds would pass a max_len-only check but could never be
+        # admitted, leaving run() to spin on it forever
         if self._paged and \
                 self._pages_needed(session) > self.layout.pool_pages:
             raise ValueError(
@@ -135,84 +183,281 @@ class SlotScheduler:
     def kv_bytes(self) -> int:
         return self.state.kv_bytes()
 
+    def assigned_kv_bytes(self) -> int:
+        """KV bytes the live page tables reference — a prefix-shared
+        page is counted once (see ``DecodeState.assigned_kv_bytes``)."""
+        return self.state.assigned_kv_bytes()
+
+    def page_refcounts(self) -> np.ndarray:
+        """Host-side per-page refcounts (copy); all zeros when idle."""
+        return self._page_ref.copy()
+
     # ------------------------------------------------------------------
-    def _assign_pages(self, slot: int, n_pages: int) -> None:
-        pages = [self.free_pages.pop() for _ in range(n_pages)]
-        self._slot_pages[slot] = pages
+    # prefix sharing: content-addressed page map + refcounts
+    # ------------------------------------------------------------------
+    def _chunk_keys(self, session: Session) -> List[bytes]:
+        """Rolling content-addressed keys for the page-aligned prompt
+        chunks inside the session's stable prefix.  Key i covers
+        ``prompt[:(i+1)*page]`` — KV content at a position is a causal
+        function of ALL preceding tokens — salted with a digest of the
+        per-request extras (encoder memory / vision inputs feed the
+        same KV, so sessions with different extras must never match)."""
+        cached = self._key_cache.get(session.sid)
+        if cached is not None:
+            return cached
+        page = self.layout.page
+        stable = self.decode.stable_prefix_len(len(session.prompt))
+        n = min(stable, len(session.prompt)) // page
+        h = hashlib.sha1()
+        if session.extras:
+            for name in sorted(session.extras):
+                h.update(name.encode())
+                h.update(np.asarray(session.extras[name]).tobytes())
+        prompt = np.ascontiguousarray(session.prompt, np.int32)
+        keys = []
+        for i in range(n):
+            h.update(prompt[i * page:(i + 1) * page].tobytes())
+            keys.append(h.copy().digest())
+        # prompt/extras are immutable after submit: memoize so a blocked
+        # queue doesn't re-hash megabyte extras once per chunk
+        self._key_cache[session.sid] = keys
+        return keys
+
+    def _register(self, key: bytes, page: int) -> None:
+        self._prefix_map[key] = page
+        self._page_key[page] = key
+
+    def _unregister(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._prefix_map.pop(key, None)
+
+    def _set_table_row(self, slot: int, pages: List[int]) -> None:
+        self._slot_pages[slot] = list(pages)
         row = np.full((self.layout.pages_per_slot,), self.layout.trash,
                       np.int32)
-        row[:n_pages] = pages
+        row[:len(pages)] = pages
         pt = self.state.bookkeeping[LT.PAGE_TABLE].at[slot].set(
             jnp.asarray(row))
         self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
 
-    def _admit_pending(self) -> None:
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _admission_plan(self, session: Session) -> Optional[Dict[str, Any]]:
+        """The pages this admission would take, or None if it must wait
+        for the free pool.  With prefix sharing, resident pages matching
+        the session's prompt-prefix chunks are adopted instead of drawn
+        from the free pool."""
+        if not self._paged:
+            return {"total": 0, "adopted": [], "keys": []}
+        total = self._pages_needed(session)
+        keys = self._chunk_keys(session) if self.prefix_sharing else []
+        adopted: List[int] = []
+        for key in keys:
+            page = self._prefix_map.get(key)
+            if page is None:
+                break
+            adopted.append(page)
+        # resyncing models: adopted pages will be forked before this
+        # slot's first resync, so their copies count against the pool now
+        reserve = len(adopted) if self._fork_reserve else 0
+        if total - len(adopted) + reserve > len(self.free_pages):
+            return None                # wait for running sessions to retire
+        return {"total": total, "adopted": adopted, "keys": keys}
+
+    def _admit(self, session: Session, slot: int,
+               plan: Dict[str, Any]) -> None:
+        mask = None
+        if self._paged:
+            n_adopt = len(plan["adopted"])
+            fresh = [self.free_pages.pop()
+                     for _ in range(plan["total"] - n_adopt)]
+            pages = list(plan["adopted"]) + fresh
+            for p in plan["adopted"]:
+                self._page_ref[p] += 1
+            for p in fresh:
+                self._page_ref[p] = 1
+            if self.prefix_sharing:
+                # register this prompt's freshly written stable pages so
+                # later sessions can adopt them (adopted ones already are)
+                for i, key in enumerate(plan["keys"]):
+                    if key not in self._prefix_map:
+                        self._register(key, pages[i])
+                if n_adopt:
+                    # tail-only admission write: adopted pages hold the
+                    # identical (content-addressed) KV already — CoW says
+                    # never write a page with refcount > 1
+                    host_mask = np.ones((self.layout.pages_per_slot,), bool)
+                    host_mask[:n_adopt] = False
+                    mask = jnp.asarray(host_mask)
+            self._set_table_row(slot, pages)
+        t0 = time.perf_counter()
+        logits, self.state = self._prefill_slot(
+            self.params, self.state, np.int32(slot),
+            jnp.asarray(session.prompt), extras=session.extras,
+            page_write_mask=mask)
+        logits = jax.block_until_ready(logits)
+        self._key_cache.pop(session.sid, None)
+        # the prefill retraces on any shape change: prompt length, mask
+        # presence, AND extras shapes (enc-dec audio / VLM vision inputs)
+        extras_sig = tuple(sorted(
+            (k, tuple(np.shape(v))) for k, v in (session.extras or {}).items()))
+        self.admit_stats.append(StepStats(
+            "admit", time.perf_counter() - t0, tokens=len(session.prompt),
+            compiled=tag_compiled(self._warm, "admit",
+                                  (len(session.prompt), mask is not None,
+                                   extras_sig))))
+        self.key, sub = jax.random.split(self.key)
+        t0k = sample_tokens(logits[None],
+                            jnp.full((1,), session.temperature), sub)[0]
+        self.last_token = self.last_token.at[slot].set(t0k)
+        session.slot = slot
+        self.sessions[slot] = session
+        self.active[slot] = True
+        self.temps[slot] = session.temperature
+        self.eos[slot] = -1 if session.eos_id is None else session.eos_id
+        session.deliver([int(t0k)])          # first token: prefill logits
+
+    def admit_pending(self) -> bool:
+        """Admit as many pending sessions as free slots/pages allow.
+        FIFO first; when the HEAD is waiting on pool pages, later
+        sessions that fit are admitted past it — but at most
+        ``max_head_skips`` consecutive overtakes, so freed pages
+        eventually reach the head (no starvation, no head-of-line
+        blocking).  Returns True if any session was admitted."""
         free = [i for i in range(self.slots) if not self.active[i]]
-        while self.pending and free:
-            sess = self.pending[0]
-            if self._paged and \
-                    self._pages_needed(sess) > len(self.free_pages):
-                break                  # wait for running sessions to retire
-            self.pending.popleft()
+        admitted = False
+        idx = 0
+        while free and idx < len(self.pending):
+            session = self.pending[idx]
+            plan = self._admission_plan(session)
+            if plan is None:
+                if idx == 0 and self._head_skips >= self.max_head_skips:
+                    break          # skip budget spent: wait for the head
+                idx += 1
+                continue
+            del self.pending[idx]
+            self._head_skips = self._head_skips + 1 if idx else 0
             slot = free.pop(0)
-            if self._paged:
-                self._assign_pages(slot, self._pages_needed(sess))
-            logits, self.state = self._prefill_slot(
-                self.params, self.state, np.int32(slot),
-                jnp.asarray(sess.prompt), extras=sess.extras)
-            self.key, sub = jax.random.split(self.key)
-            t0 = sample_tokens(logits[None],
-                               jnp.full((1,), sess.temperature), sub)[0]
-            self.last_token = self.last_token.at[slot].set(t0)
-            sess.slot = slot
-            self.sessions[slot] = sess
-            self.active[slot] = True
-            self.temps[slot] = sess.temperature
-            self.eos[slot] = -1 if sess.eos_id is None else sess.eos_id
-            sess.deliver([int(t0)])          # first token: prefill logits
-            if sess.done:
+            self._admit(session, slot, plan)
+            admitted = True
+            if session.done:
                 self._release(slot)
                 free.insert(0, slot)
+        if not self.pending:
+            self._head_skips = 0
+        return admitted
 
+    # ------------------------------------------------------------------
+    # copy-on-write forking (chunk boundary)
+    # ------------------------------------------------------------------
+    def _cow_before_chunk(self) -> np.ndarray:
+        """A page is writable iff refcount == 1.  The only device-side
+        writes that can target resident prefix pages are the periodic
+        resync's KV rebuild (token appends land beyond the stable
+        prefix by construction), so any active slot whose resync may
+        fire within the next chunk is made page-private NOW.  A slot
+        that cannot fork (no free pages for the copies) is PAUSED for
+        this chunk — masked out of the dispatch, frozen bit-identically
+        — and retried once retiring sessions free pages.  Admission's
+        fork reserve is checked per-admission against the instantaneous
+        free pool (commitments are not tracked across slots — e.g. a
+        slot's pages become shared only when a LATER session adopts
+        them), so pausing is the backstop that keeps in-flight sessions
+        alive instead of crashing them.  Returns the (B,) mask of slots
+        that actually decode this chunk."""
+        run_mask = self.active.copy()
+        anticipated = self.decode.sync_anticipated(self.state,
+                                                   self.chunk_size)
+        for slot in np.nonzero(self.active)[0]:
+            if anticipated[slot] and not self._make_slot_private(int(slot)):
+                run_mask[slot] = False
+        return run_mask
+
+    def _make_slot_private(self, slot: int) -> bool:
+        """Fork the slot's shared pages to fresh ones; True on success,
+        False when the free pool cannot back the copies (caller pauses
+        the slot — forking later is always still correct)."""
+        pages = self._slot_pages[slot]
+        shared = [j for j, p in enumerate(pages) if self._page_ref[p] > 1]
+        if len(shared) > len(self.free_pages):
+            return False
+        for p in pages:
+            if self._page_ref[p] == 1:
+                # sole owner about to rewrite the page: its content may
+                # stop matching the registered token prefix — retract it
+                self._unregister(p)
+        if not shared:
+            return True
+        fresh = [self.free_pages.pop() for _ in shared]
+        pps = self.layout.pages_per_slot
+        src = np.full((pps,), self.layout.trash, np.int32)
+        dst = np.full((pps,), self.layout.trash, np.int32)
+        for k, (j, p_new) in enumerate(zip(shared, fresh)):
+            src[k], dst[k] = pages[j], p_new
+        self.state = self._fork(self.state, jnp.asarray(src),
+                                jnp.asarray(dst))
+        for j, p_new in zip(shared, fresh):
+            self._page_ref[pages[j]] -= 1
+            self._page_ref[p_new] = 1
+            pages[j] = p_new
+        self._set_table_row(slot, pages)
+        return True
+
+    # ------------------------------------------------------------------
     def _release(self, slot: int) -> None:
         self.sessions[slot] = None
         self.active[slot] = False
         self.temps[slot] = 0.0
         self.eos[slot] = -1
-        # clear the slot so stale phase counters can't keep firing the
-        # on-device resync for an empty row (paged: zeros are written
-        # through the slot's still-assigned pages)
-        self.state = self._clear(self.state, np.int32(slot),
-                                 self._empty_row)
         if self._paged:
-            # recycle from the host-side assignment record — no device
-            # read-back on the eviction path
-            self.free_pages.extend(self._slot_pages[slot])
-            self._slot_pages[slot] = []
+            # retarget the table row at TRASH before the clearing write
+            # below, so clearing zeros can never land on a page another
+            # slot still references (prefix sharing); then drop refs —
+            # a page is recycled (and leaves the prefix map) only at 0
             trash_row = jnp.full((self.layout.pages_per_slot,),
                                  self.layout.trash, jnp.int32)
             pt = self.state.bookkeeping[LT.PAGE_TABLE].at[slot].set(trash_row)
             self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
+            for p in self._slot_pages[slot]:
+                self._page_ref[p] -= 1
+                if self._page_ref[p] == 0:
+                    self._unregister(p)
+                    self.free_pages.append(p)
+            self._slot_pages[slot] = []
+        # clear the slot so stale phase counters can't keep firing the
+        # on-device resync for an empty row (paged: the writes land on
+        # the trash page — the slot no longer owns real pages)
+        self.state = self._clear(self.state, np.int32(slot),
+                                 self._empty_row)
         self.last_token = self.last_token.at[slot].set(0)
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """Admit pending sessions, then decode ONE chunk for all active
-        slots (a single dispatch).  Returns False when idle."""
-        from repro.serving.engine import StepStats
-        self._admit_pending()
+        """Admit pending sessions, then decode ONE chunk for the active
+        slots (a single dispatch; slots paused for copy-on-write fork
+        headroom are masked out, frozen bit-identically).  Returns False
+        when no progress was made — nothing admitted and nothing could
+        decode."""
+        admitted = self.admit_pending()
         if not self.active.any():
-            return False
+            return admitted
+        run_mask = self._cow_before_chunk() if self.prefix_sharing \
+            else self.active
+        if not run_mask.any():
+            return admitted            # every active slot fork-paused
         t0 = time.perf_counter()
         toks, self.state, self.key = self._chunk(
             self.params, self.state, self.last_token, self.key,
-            jnp.asarray(self.temps), jnp.asarray(self.active),
+            jnp.asarray(self.temps), jnp.asarray(run_mask),
             n_steps=self.chunk_size, eos=jnp.asarray(self.eos))
         self.last_token = toks[:, -1]
         host_toks = np.asarray(toks)         # the ONE host sync per chunk
-        self.stats.append(StepStats("chunk", time.perf_counter() - t0,
-                                    tokens=self.chunk_size))
-        for slot in np.nonzero(self.active)[0]:
+        self.stats.append(StepStats(
+            "chunk", time.perf_counter() - t0, tokens=self.chunk_size,
+            compiled=tag_compiled(self._warm, "chunk")))
+        for slot in np.nonzero(run_mask)[0]:
             sess = self.sessions[slot]
             sess.deliver(host_toks[slot])
             if sess.done:
@@ -220,7 +465,23 @@ class SlotScheduler:
         return True
 
     def run(self) -> None:
-        """Drive chunks until every submitted session has completed."""
+        """Drive chunks until every submitted session has completed.
+
+        Raises instead of spinning: if nothing could be admitted and
+        nothing could decode (every active slot fork-paused, or no
+        active slot at all) while work remains, no future chunk can
+        ever free pages or slots — busy-looping would never terminate."""
         while True:
-            if not self.step() and not self.pending:
+            if self.step():
+                continue
+            if not self.pending and not self.active.any():
                 return
+            head = self.pending[0] if self.pending else None
+            need = self._pages_needed(head) if head and self._paged else 0
+            pool = self.layout.pool_pages if self._paged else 0
+            raise RuntimeError(
+                f"scheduler stuck: {len(self.pending)} pending and "
+                f"{self.n_active} fork-paused session(s) with nothing able "
+                f"to decode or free resources (head needs {need} pages; "
+                f"free {len(self.free_pages)}/{pool}) — the pool/slot "
+                f"accounting cannot make progress")

@@ -1,0 +1,367 @@
+"""Paged-pool admission regressions + prefix-sharing / copy-on-write.
+
+Three concerns:
+
+1. **Admission bugs** — pool-capacity validation at ``submit`` (a
+   session needing more pages than the POOL holds used to pass the
+   max_len-only check and deadlock ``run()``), ``run()`` raising instead
+   of busy-spinning when nothing can make progress, and bounded
+   skip-ahead past a page-blocked queue head (head-of-line blocking).
+2. **Prefix sharing (CoW)** — admission maps resident content-addressed
+   pages instead of re-writing them; refcounted release; shared pages
+   (refcount > 1) are NEVER written (the resync forks first); sessions
+   sharing a prefix stay token-identical to their solo runs across
+   ``{paged, paged_int8}``.
+3. **Stress** — undersized pool, mixed session sizes, staggered
+   submission: the scheduler must terminate with every budget honoured
+   and the pool fully recycled (the deadlock class cannot regress).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.models import layouts as LT
+from repro.models.api import build_decode, build_model
+from repro.serving.engine import Engine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+
+
+@pytest.fixture(scope="module")
+def tlin_setup():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                  attention_mode="tlin")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = reduced(get_config("llama3_405b"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _shared_prompts(cfg, n, common_len=32, tail_len=8, seed=0):
+    """n prompts sharing a page-aligned common prefix, distinct equal-
+    length tails (equal lengths keep prefill bitwise-reproducible, so
+    greedy parity with solo runs is exact)."""
+    rng = np.random.RandomState(seed)
+    common = rng.randint(1, cfg.vocab_size, size=common_len).astype(np.int32)
+    return [np.concatenate([common, rng.randint(
+        1, cfg.vocab_size, size=tail_len).astype(np.int32)])
+        for _ in range(n)]
+
+
+def _paged_snapshot(state, pages):
+    """Content of the given pool pages for every paged field."""
+    lay = state.layout
+    out = {}
+    for f, arr in state.kv.items():
+        la = lay._length_axis(f)
+        if la is None:
+            continue
+        out[f] = np.take(np.asarray(arr), pages, axis=la - 1).copy()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Admission bugs: pool-capacity deadlock + head-of-line blocking
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_session_exceeding_pool_capacity(tlin_setup):
+    """A session whose page need exceeds the TOTAL pool passes a
+    max_len-only check but can never be admitted — submit must reject it
+    up front instead of letting run() spin on it forever."""
+    cfg, api, params = tlin_setup
+    dec = build_decode(cfg, LT.LayoutSpec(kind="paged", page_size=16,
+                                          pool_pages=4))
+    sched = SlotScheduler(dec, params, slots=1, max_len=128, chunk_size=4)
+    with pytest.raises(ValueError, match="could never be admitted"):
+        # prompt 40 + gen 30 + chunk 4 = 74 tokens -> 5 pages > pool 4
+        sched.submit(Session(np.ones(40, np.int32), max_new_tokens=30))
+    assert not sched.pending
+
+
+def test_run_raises_instead_of_spinning_when_stuck(tlin_setup):
+    """If nothing is active and the pending head cannot be admitted, no
+    future chunk can free resources — run() must raise, not busy-spin."""
+    cfg, api, params = tlin_setup
+    dec = build_decode(cfg, LT.LayoutSpec(kind="paged", page_size=16,
+                                          pool_pages=10))
+    sched = SlotScheduler(dec, params, slots=1, max_len=128, chunk_size=4)
+    sched.submit(Session(np.ones(20, np.int32), max_new_tokens=8))
+    sched.free_pages.clear()          # simulate leaked page accounting
+    with pytest.raises(RuntimeError, match="scheduler stuck"):
+        sched.run()
+
+
+def test_head_of_line_blocking_bounded_skip_ahead(lm_setup):
+    """One large session running, another large blocked at the head of
+    the queue on pages: small sessions behind it that fit the free pool
+    and a free slot must be admitted past it (the pre-fix scheduler
+    stopped at the blocked head), while the head still completes."""
+    cfg, api, params = lm_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=6)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4)
+    big_a = sched.submit(Session(np.ones(40, np.int32), max_new_tokens=8))
+    sched.step()                                  # A admitted: 4/6 pages
+    big_b = sched.submit(Session(np.full(40, 2, np.int32),
+                                 max_new_tokens=8))
+    small_c = sched.submit(Session(np.full(8, 3, np.int32),
+                                   max_new_tokens=4))
+    small_d = sched.submit(Session(np.full(8, 4, np.int32),
+                                   max_new_tokens=4))
+    sched.admit_pending()
+    # B (needs 4 pages, 2 free) waits; C and D leapfrog into free slots
+    assert big_b.slot is None
+    assert small_c.slot is not None and small_d.slot is not None
+    assert sched.n_active == 3
+    sched.run()
+    for s in (big_a, big_b, small_c, small_d):
+        assert s.done and len(s.tokens) == s.max_new_tokens
+    assert len(sched.free_pages) == 6
+
+    # skip budget 0 degenerates to strict FIFO: nothing overtakes the head
+    fifo = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                         max_len=128, chunk_size=4, max_head_skips=0)
+    fifo.submit(Session(np.ones(40, np.int32), max_new_tokens=8))
+    fifo.step()
+    fifo.submit(Session(np.full(40, 2, np.int32), max_new_tokens=8))
+    small = fifo.submit(Session(np.full(8, 3, np.int32), max_new_tokens=4))
+    fifo.admit_pending()
+    assert small.slot is None         # budget spent: head may not be passed
+    fifo.run()
+    assert small.done
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: CoW parity, refcounts, resync write-safety
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["paged", "paged_int8"])
+def test_prefix_sharing_cow_parity_token_identical(tlin_setup, kind):
+    """Sessions admitted with a shared page-aligned prompt prefix map
+    the resident pages (counted once), stay token-identical to their
+    solo runs through the copy-on-write resync fork, and recycle every
+    page (refcount 0, map empty) after eviction."""
+    cfg, api, params = tlin_setup
+    spec = LT.LayoutSpec(kind=kind, page_size=16, pool_pages=14)
+    prompts = _shared_prompts(cfg, 3)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    sessions = [sched.submit(Session(p, max_new_tokens=8)) for p in prompts]
+    sched.admit_pending()
+    refs = sched.page_refcounts()
+    # stable prefix = 32 tokens (w_og=8 window part excluded) = 2 pages,
+    # mapped by all three sessions; 2 private tail pages each
+    assert int((refs == 3).sum()) == 2
+    assert int((refs > 0).sum()) == 2 + 3 * 2
+    shared_bytes = sched.assigned_kv_bytes()
+
+    no_share = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                             max_len=128, chunk_size=4)
+    for p in prompts:
+        no_share.submit(Session(p, max_new_tokens=8))
+    no_share.admit_pending()
+    assert shared_bytes < no_share.assigned_kv_bytes()
+
+    sched.run()
+    no_share.run()
+    # solo reference: one session at a time through the SAME layout
+    solo = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                         max_len=128, chunk_size=4)
+    for s, p in zip(sessions, prompts):
+        ref = solo.submit(Session(p, max_new_tokens=8))
+        solo.run()
+        assert s.tokens == ref.tokens, "sharing changed the stream"
+    if kind == "paged":               # exact layout: dense engine agrees
+        eng = Engine(api, params, max_len=128)
+        for s, p in zip(sessions, prompts):
+            assert s.tokens == eng.generate(
+                {"tokens": jnp.asarray(p)[None]}, 8)[0].tolist()
+    assert (sched.page_refcounts() == 0).all()
+    assert len(sched.free_pages) == 14           # pages recycled
+    assert not sched._prefix_map and not sched._page_key
+
+
+def test_resync_never_writes_shared_pages(tlin_setup):
+    """The CoW invariant: a page is writable iff refcount == 1.  The
+    only device-side write that can target resident prefix pages is the
+    periodic resync, so at every chunk boundary, after the CoW pass,
+    every slot whose resync may fire inside the coming chunk must own
+    exclusively refcount-1 pages (its formerly shared pages were forked
+    to fresh ones) — and pages that stay shared through the chunk come
+    out bit-identical."""
+    cfg, api, params = tlin_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=14)
+    prompts = _shared_prompts(cfg, 3, seed=1)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    for p in prompts:
+        sched.submit(Session(p, max_new_tokens=8))
+    saw_shared = saw_fork = False
+    while True:
+        sched.admit_pending()
+        refs_before = sched.page_refcounts()
+        tables_before = [list(r) for r in sched._slot_pages]
+        saw_shared = saw_shared or bool((refs_before > 1).any())
+        anticipated = sched.decode.sync_anticipated(sched.state,
+                                                    sched.chunk_size)
+        sched._cow_before_chunk()
+        refs = sched.page_refcounts()
+        for slot in np.nonzero(sched.active)[0]:
+            if not anticipated[slot]:
+                continue
+            pages = sched._slot_pages[slot]
+            assert all(refs[p] == 1 for p in pages), \
+                "a slot about to resync still references a shared page"
+            if any(refs_before[p0] > 1 for p0 in tables_before[slot]):
+                saw_fork = True      # it really forked, not just released
+        # pages still shared after the CoW pass must survive the chunk
+        still_shared = np.nonzero(refs > 1)[0]
+        before = _paged_snapshot(sched.state, still_shared)
+        if not sched.step() and not sched.pending:
+            break
+        after = _paged_snapshot(sched.state, still_shared)
+        for f in before:
+            np.testing.assert_array_equal(
+                after[f], before[f],
+                err_msg=f"chunk wrote shared (refcount>1) pages of {f}")
+    assert saw_shared and saw_fork    # the invariant was exercised
+
+
+def test_lm_prefix_sharing_persists_across_staggered_admission(lm_setup):
+    """The dense-LM family has no periodic resync, so nothing ever
+    rewrites resident prompt pages: sharing persists for the whole
+    session lifetime, even across staggered admission — and the streams
+    still match the solo runs exactly."""
+    cfg, api, params = lm_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=10)
+    pa, pb = _shared_prompts(cfg, 2, seed=2)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=2,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    sa = sched.submit(Session(pa, max_new_tokens=12))
+    sched.step()                      # A decodes alone for one chunk
+    sb = sched.submit(Session(pb, max_new_tokens=12))
+    sched.step()
+    refs = sched.page_refcounts()
+    assert int((refs == 2).sum()) == 2           # 40-token prompt: the two
+    # fully-covered prefix pages stay shared for the sessions' lifetime
+    # (nothing rewrites them), so the pool holds 4 + 4 - 2 unique pages
+    assert int((refs > 0).sum()) == 6
+    # token appends land beyond the stable prefix by construction: the
+    # shared pages' content survives further decode chunks bit-identical
+    shared_pages = np.nonzero(refs > 1)[0]
+    before = _paged_snapshot(sched.state, shared_pages)
+    sched.step()
+    after = _paged_snapshot(sched.state, shared_pages)
+    for f in before:
+        np.testing.assert_array_equal(after[f], before[f])
+    sched.run()
+    eng = Engine(api, params, max_len=128)
+    for s, p in ((sa, pa), (sb, pb)):
+        assert s.tokens == eng.generate(
+            {"tokens": jnp.asarray(p)[None]}, 12)[0].tolist()
+    assert (sched.page_refcounts() == 0).all()
+    assert len(sched.free_pages) == 10
+
+
+def test_fork_starvation_pauses_slot_instead_of_crashing(tlin_setup):
+    """When the free pool cannot back a slot's copy-on-write fork, the
+    slot is PAUSED for the chunk (frozen bit-identically, delivered
+    nothing) rather than the scheduler raising away every in-flight
+    session; it resumes — and its stream stays exact — once a retiring
+    session frees pages."""
+    cfg, api, params = tlin_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=8)
+    pa, pb = _shared_prompts(cfg, 2, seed=4)          # 4 pages each, 2 shared
+    small = np.arange(1, 21, dtype=np.int32) % cfg.vocab_size   # 2 pages
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    sa = sched.submit(Session(pa, max_new_tokens=8))
+    sb = sched.submit(Session(pb, max_new_tokens=8))
+    sc = sched.submit(Session(small, max_new_tokens=4))
+    sched.step()
+    # pool exhausted (4 + 2 + 2 pages): neither sharer can fork for its
+    # first resync, so both sit paused with only the admission token,
+    # while the independent small session decoded and retired
+    assert sc.done
+    assert len(sa.tokens) == 1 and len(sb.tokens) == 1
+    sched.run()                       # small's pages freed -> forks happen
+    eng = Engine(api, params, max_len=128)
+    for s, p in ((sa, pa), (sb, pb)):
+        assert s.done
+        assert s.tokens == eng.generate(
+            {"tokens": jnp.asarray(p)[None]}, 8)[0].tolist()
+    assert (sched.page_refcounts() == 0).all()
+    assert len(sched.free_pages) == 8
+
+
+def test_multi_adopter_overcommit_resolves_via_pausing(tlin_setup):
+    """Admission reserves fork headroom per-admission only (commitments
+    are not tracked jointly), so several adopters can still overcommit
+    the pool — the run must resolve through pausing + retirement, never
+    wedge or crash, and every stream stays exact."""
+    cfg, api, params = tlin_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=10)
+    prompts = _shared_prompts(cfg, 3, seed=5)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    sessions = [sched.submit(Session(p, max_new_tokens=8)) for p in prompts]
+    sched.run()
+    eng = Engine(api, params, max_len=128)
+    for s, p in zip(sessions, prompts):
+        assert s.done
+        assert s.tokens == eng.generate(
+            {"tokens": jnp.asarray(p)[None]}, 8)[0].tolist()
+    assert (sched.page_refcounts() == 0).all()
+    assert len(sched.free_pages) == 10
+
+
+# ---------------------------------------------------------------------------
+# Stress: undersized pool, mixed sizes, staggered submission
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_stress_undersized_pool_mixed_sizes(tlin_setup):
+    """Fast CPU stress for the deadlock class: more sessions than slots,
+    mixed prompt/budget sizes on an undersized pool with prefix sharing
+    on — the run must terminate with every budget honoured, the skip-
+    ahead bounded, and the pool fully recycled."""
+    cfg, api, params = tlin_setup
+    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=12)
+    rng = np.random.RandomState(3)
+    common = rng.randint(1, cfg.vocab_size, size=32).astype(np.int32)
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
+                          max_len=128, chunk_size=4, prefix_sharing=True)
+    sessions = []
+    for i in range(7):
+        if i % 2 == 0:               # sharers: common prefix + 8 tail
+            prompt = np.concatenate([common, rng.randint(
+                1, cfg.vocab_size, size=8).astype(np.int32)])
+        else:                        # small standalone prompts
+            prompt = rng.randint(1, cfg.vocab_size,
+                                 size=8 + 4 * (i % 3)).astype(np.int32)
+        sessions.append(sched.submit(Session(prompt,
+                                             max_new_tokens=4 + 2 * (i % 3))))
+        if i % 3 == 2:
+            sched.step()             # staggered: interleave decode chunks
+    sched.run()
+    for s in sessions:
+        assert s.done and len(s.tokens) == s.max_new_tokens
+    assert (sched.page_refcounts() == 0).all()
+    assert len(sched.free_pages) == 12
+    assert not sched._prefix_map
+    # StepStats compile tagging: exactly the first chunk entry is marked
+    chunks = [s for s in sched.stats if s.kind == "chunk"]
+    assert chunks[0].compiled and not any(s.compiled for s in chunks[1:])
+    admits = [s for s in sched.admit_stats]
+    assert admits and admits[0].compiled

@@ -375,6 +375,25 @@ def test_decode_chunk_is_single_dispatch_without_host_comms(setup):
     assert all(s.tokens == 6 for s in sched.stats)
 
 
+def test_stepstats_compiled_tagging(setup):
+    """Entries whose wall-clock includes the one-time jit compile carry
+    compiled=True (exactly the first dispatch of each kind/signature),
+    so throughput aggregation can exclude them — a cold first chunk
+    must never skew BENCH_inference tok/s again."""
+    cfg, api, params = setup
+    eng = Engine(api, params, max_len=64)
+    p = {"tokens": jnp.ones((1, 8), jnp.int32)}
+    eng.generate(p, 6, record_stats=True)
+    by_kind = {}
+    for s in eng.stats:
+        by_kind.setdefault(s.kind, []).append(s.compiled)
+    for kind, flags in by_kind.items():
+        assert flags[0] and not any(flags[1:]), (kind, flags)
+    eng.stats.clear()
+    eng.generate(p, 6, record_stats=True)      # warm: nothing compiles
+    assert not any(s.compiled for s in eng.stats)
+
+
 # ---------------------------------------------------------------------------
 # DecodeState partition (cache accounting)
 # ---------------------------------------------------------------------------
