@@ -13,8 +13,11 @@ Validates the paper's qualitative claims at reduced scale:
   (h-i) hit-step speedup of TConst over Base / TLin grows with N.
 
 Besides the CSV rows, the run writes ``BENCH_inference.json`` (cwd) with
-tokens/s, cache bytes per layout and the compacted resync-miss cost, so
-the perf trajectory is tracked across PRs.
+tokens/s, cache bytes per layout, the compacted resync-miss cost, the
+prefix-sharing byte accounting, and the chunked-admission scenario
+(forward tokens / est. prefill FLOPs + warm latency vs unshared-tail
+length, shared vs cold vs one-shot, plus the prompt-length-bucketing
+compile counts), so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -184,6 +187,103 @@ def _shared_prefix_scenario(api, params, kind, emit) -> Dict:
     return row
 
 
+def _chunked_prefill_scenario(emit) -> Dict:
+    """Chunked KV-conditioned admission (PR 5): warm admission latency
+    and forward compute (prefill FLOPs) vs the UNSHARED-TAIL length, for
+    a prompt whose prefix is resident (prefix sharing) vs a cold prompt,
+    on a small dense LM — the family where admission forward compute
+    genuinely scales with the tail.  Also the one-shot admission
+    baseline.  forward_tokens comes straight from the scheduler's
+    admit_stats; FLOPs are estimated as 2 * params * forward_tokens."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+
+    cfg = reduced(get_config("smollm_360m"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    page = chunk = 16
+    prefix_len = 64
+    spec = LayoutSpec(kind="paged", page_size=page, pool_pages=64)
+    rng = np.random.RandomState(11)
+    common = rng.randint(1, cfg.vocab_size, size=prefix_len).astype(np.int32)
+
+    def measure(tail: int, sharing: bool, prefill_chunk):
+        """Median warm admission over 3 probes (max_new_tokens=1, so a
+        probe's slot frees at admission) behind a resident holder."""
+        sched = SlotScheduler(build_decode(cfg, spec), params, slots=2,
+                              max_len=256, chunk_size=4,
+                              prefix_sharing=sharing,
+                              prefill_chunk=prefill_chunk)
+        holder = np.concatenate([common, rng.randint(
+            1, cfg.vocab_size, size=tail).astype(np.int32)])
+        sched.submit(Session(holder, max_new_tokens=32))
+        sched.admit_pending()          # prefix now resident + refcounted
+        for _ in range(3):
+            probe = np.concatenate([common, rng.randint(
+                1, cfg.vocab_size, size=tail).astype(np.int32)])
+            sched.submit(Session(probe, max_new_tokens=1))
+            sched.admit_pending()
+        stats = sched.admit_stats[1:]               # drop the holder
+        warm = [s for s in stats if not s.compiled] or stats
+        return {
+            "admit_warm_ms": 1e3 * float(np.median(
+                [s.seconds for s in warm])),
+            "forward_tokens": warm[-1].forward_tokens,
+            "prefill_flops_est": 2.0 * n_params * warm[-1].forward_tokens,
+        }
+
+    rows = []
+    for tail in (16, 48, 96):
+        shared = measure(tail, True, chunk)
+        cold = measure(tail, False, chunk)
+        oneshot = measure(tail, False, None)
+        rows.append({"prefix_len": prefix_len, "tail": tail,
+                     "shared": shared, "cold": cold, "oneshot": oneshot})
+        emit(f"chunked_prefill/tail={tail}/shared_forward_tokens",
+             shared["forward_tokens"],
+             f"cold forwards {cold['forward_tokens']} "
+             f"(prompt {prefix_len + tail})")
+        emit(f"chunked_prefill/tail={tail}/shared_admit_ms",
+             shared["admit_warm_ms"],
+             f"cold {cold['admit_warm_ms']:.2f}ms, one-shot "
+             f"{oneshot['admit_warm_ms']:.2f}ms")
+    return {"arch": "smollm_360m(reduced)", "page": page, "chunk": chunk,
+            "rows": rows}
+
+
+def _bucketed_admission_scenario(api, params, emit) -> Dict:
+    """Prompt-length bucketing: K distinct prompt lengths should produce
+    at most bucket-count compile-tagged admissions under the chunked
+    (tconst: bucketed fixed-shape) prefill, vs one per length without."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+
+    lengths = [17, 26, 35, 44]
+
+    def count(prefill_chunk):
+        sched = SlotScheduler(build_decode(api.cfg), params, slots=1,
+                              max_len=128, chunk_size=4,
+                              prefill_chunk=prefill_chunk)
+        rng = np.random.RandomState(5)
+        for n in lengths:
+            sched.submit(Session(rng.randint(
+                1, api.cfg.vocab_size, size=n).astype(np.int32),
+                max_new_tokens=1))
+            sched.admit_pending()
+        return sum(1 for s in sched.admit_stats if s.compiled)
+
+    chunked, oneshot = count(16), count(None)
+    emit("chunked_prefill/bucketed_compiled_admissions", chunked,
+         f"{len(lengths)} distinct prompt lengths; one-shot tags "
+         f"{oneshot}")
+    return {"lengths": lengths, "chunked_compiled": chunked,
+            "oneshot_compiled": oneshot}
+
+
 def run(emit) -> None:
     variants = {
         "base": reduced(get_config("tconst_41m"), dtype="float32",
@@ -195,6 +295,7 @@ def run(emit) -> None:
     results: Dict[str, List[Dict]] = {}
     layouts: Dict[str, Dict] = {}
     prefix_sharing: Dict[str, Dict] = {}
+    bucketed: Dict[str, Dict] = {}
     for name, cfg in variants.items():
         api = build_model(cfg)
         params = api.init(jax.random.PRNGKey(0))
@@ -219,6 +320,14 @@ def run(emit) -> None:
             prefix_sharing = {
                 kind: _shared_prefix_scenario(api, params, kind, emit)
                 for kind in ("paged", "paged_int8")}
+        if name == "tconst":
+            # bucketing headline for the paper's own family: admission
+            # collapses to ONE fixed-shape dispatch (resync is already
+            # max_len-shaped; the window pass pads to W_og)
+            bucketed[name] = _bucketed_admission_scenario(api, params,
+                                                          emit)
+    chunked_prefill = _chunked_prefill_scenario(emit)
+    chunked_prefill["bucketed_admissions"] = bucketed
 
     # derived paper claims ---------------------------------------------------
     tc = results["tconst"]
@@ -248,6 +357,10 @@ def run(emit) -> None:
         # once (assigned_kv_bytes), streams identical, warm admission
         # latency with/without sharing (compile-tagged entries excluded)
         "prefix_sharing": prefix_sharing,
+        # chunked KV-conditioned admission: forward tokens / est. FLOPs
+        # and warm latency vs unshared-tail length (shared vs cold vs
+        # one-shot), plus the prompt-length-bucketing compile counts
+        "chunked_prefill": chunked_prefill,
         "derived": {
             "tconst_hit_flatness": flat,
             "tconst_cache_O1_ratio": cache_ratio,

@@ -671,30 +671,20 @@ def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     return logits, _undense_views(out)
 
 
-def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
-            max_len: int, mode: str = "tconst"
-            ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Process a prompt: resync over the history part, teacher-forced pass
-    over the trailing (≤ W_og) generation-window part, fill all caches.
-
-    tokens: (B, N0), N0 static.  Returns (next-token logits (B, V), cache).
-    """
+def _prefill_window_pass(params: Params, cache: Dict[str, Any],
+                         win: jax.Array, gen_pos: jax.Array,
+                         cfg: ModelConfig, mode: str
+                         ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Teacher-forced generation-window pass shared by :func:`prefill`
+    (window = the prompt's trailing 1..W_og tokens, static width W) and
+    :func:`prefill_bucketed` (fixed W_og width, trailing padding masked
+    by causality now and by ``gen_len`` afterwards).  Fills the leading
+    W slots of the per-layer gen KV buffers (W < W_og: the rest stays
+    zero).  Returns (hg (B, W, D), (gen_k, gen_v) stacked per block)."""
     tc = cfg.tconst
     eps = cfg.norm_eps
-    B, n0 = tokens.shape
-    g0 = ((n0 - 1) % tc.w_og) + 1            # window part: 1..W_og tokens
+    B, W = win.shape
     dtype = jnp.dtype(cfg.dtype)
-
-    cache = init_tconst_cache(cfg, B, max_len, mode)
-    cache["tokens"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["tokens"], tokens, 0, axis=1)
-    cache["hist_len"] = jnp.full((B,), n0 - g0, jnp.int32)
-    cache["gen_len"] = jnp.zeros((B,), jnp.int32)
-    cache = resync(params, cache, cfg, mode)     # gen_len folded in (=0)
-
-    # teacher-forced generation-window pass, filling gen KV caches
-    win = tokens[:, n0 - g0:]
-    gen_pos = (n0 - g0) + jnp.broadcast_to(jnp.arange(g0)[None], (B, g0))
     cos_g, sin_g = _rope(gen_pos, cfg)
     hg = E.embed_tokens(params["embed"], win, dtype)
     gmask = A.make_mask(gen_pos, gen_pos, "causal")
@@ -713,13 +703,14 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
             q = R.apply_rope(q, cos_g, sin_g)
             out = A.out_proj(li["attn"], A.sdpa(
                 q, k, v, gmask, cfg.logit_softcap), dtype)
-            # store window K/V into slots [0, g0)
-            gk = jnp.zeros((B, tc.w_og) + k.shape[2:], dtype)
-            gv = jnp.zeros((B, tc.w_og) + v.shape[2:], dtype)
-            gk = jax.lax.dynamic_update_slice_in_dim(gk, k, 0, axis=1)
-            gv = jax.lax.dynamic_update_slice_in_dim(gv, v, 0, axis=1)
-            new_gk.append(gk)
-            new_gv.append(gv)
+            # store window K/V into slots [0, W)
+            if W < tc.w_og:
+                gk = jnp.zeros((B, tc.w_og) + k.shape[2:], dtype)
+                gv = jnp.zeros((B, tc.w_og) + v.shape[2:], dtype)
+                k = jax.lax.dynamic_update_slice_in_dim(gk, k, 0, axis=1)
+                v = jax.lax.dynamic_update_slice_in_dim(gv, v, 0, axis=1)
+            new_gk.append(k)
+            new_gv.append(v)
             if i >= 1:
                 out = out + A.cross_attend_cached(
                     li["attn"], xn, ctx_k[i - 1], ctx_v[i - 1],
@@ -738,10 +729,83 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
     xs = (params["blocks"], cache["ctx_k"], cache["ctx_v"])
     if mode == "tlin":
         xs = xs + (cache["hist_k"], cache["hist_v"])
-    hg, (gk, gv) = jax.lax.scan(block_body, hg, xs)
+    return jax.lax.scan(block_body, hg, xs)
 
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len: int, mode: str = "tconst"
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process a prompt: resync over the history part, teacher-forced pass
+    over the trailing (≤ W_og) generation-window part, fill all caches.
+
+    tokens: (B, N0), N0 static.  Returns (next-token logits (B, V), cache).
+    """
+    tc = cfg.tconst
+    B, n0 = tokens.shape
+    g0 = ((n0 - 1) % tc.w_og) + 1            # window part: 1..W_og tokens
+
+    cache = init_tconst_cache(cfg, B, max_len, mode)
+    cache["tokens"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["tokens"], tokens, 0, axis=1)
+    cache["hist_len"] = jnp.full((B,), n0 - g0, jnp.int32)
+    cache["gen_len"] = jnp.zeros((B,), jnp.int32)
+    cache = resync(params, cache, cfg, mode)     # gen_len folded in (=0)
+
+    win = tokens[:, n0 - g0:]
+    gen_pos = (n0 - g0) + jnp.broadcast_to(jnp.arange(g0)[None], (B, g0))
+    hg, (gk, gv) = _prefill_window_pass(params, cache, win, gen_pos, cfg,
+                                        mode)
     hg = rmsnorm(params["final_norm"], hg, cfg.norm_eps)
     logits = E.lm_head(params["embed"], hg, cfg.logit_softcap)[:, -1]
     cache["gen_k"], cache["gen_v"] = gk, gv
     cache["gen_len"] = jnp.full((B,), g0, jnp.int32)
+    return logits, cache
+
+
+def prefill_bucketed(params: Params, tokens: jax.Array, n_valid: jax.Array,
+                     cfg: ModelConfig, mode: str = "tconst"
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Bucketed-shape prefill: ONE compile for every prompt length.
+
+    :func:`prefill` compiles once per distinct prompt length (its token
+    argument and teacher-forced window are ``n0``-shaped).  Here the
+    prompt arrives already zero-padded into the full ``(B, max_len)``
+    token buffer with a TRACED per-row length ``n_valid``, the resync is
+    its usual fixed-``max_len`` dispatch, and the generation-window pass
+    runs at a fixed ``W_og`` width with validity masking — so the entire
+    admission is shape-independent.  Written positions beyond each row's
+    window part (``slots >= g0``) hold garbage that ``gen_len`` masks
+    out of every later attend, exactly like the unchunked cache.
+
+    tokens: (B, max_len) int32, zeros beyond ``n_valid`` (the resync
+    embeds the whole buffer either way, so padding must match the
+    unchunked token buffer bit-for-bit).  n_valid: (B,) int32 >= 1.
+    Returns (next-token logits (B, V), cache) — stream-identical to
+    :func:`prefill` up to float association.
+    """
+    tc = cfg.tconst
+    B, max_len = tokens.shape
+    g0 = ((n_valid - 1) % tc.w_og) + 1       # (B,) window part: 1..W_og
+
+    cache = init_tconst_cache(cfg, B, max_len, mode)
+    cache["tokens"] = tokens
+    cache["hist_len"] = n_valid - g0
+    cache["gen_len"] = jnp.zeros((B,), jnp.int32)
+    cache = resync(params, cache, cfg, mode)     # fixed-shape O(max_len)
+
+    # teacher-forced generation-window pass at fixed W_og width: row b's
+    # window tokens are tokens[hist_len : hist_len + g0]; trailing slots
+    # [g0, W_og) are padding whose K/V is never attended (masked by
+    # gen_len afterwards, by causality inside this pass).
+    win_pos = cache["hist_len"][:, None] + jnp.arange(tc.w_og)[None]
+    win = jnp.take_along_axis(tokens, jnp.clip(win_pos, 0, max_len - 1),
+                              axis=1)
+    hg, (gk, gv) = _prefill_window_pass(params, cache, win, win_pos, cfg,
+                                        mode)
+    hg = rmsnorm(params["final_norm"], hg, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], hg, cfg.logit_softcap)  # (B,W_og,V)
+    logits = jnp.take_along_axis(
+        logits, (g0 - 1)[:, None, None], axis=1)[:, 0]
+    cache["gen_k"], cache["gen_v"] = gk, gv
+    cache["gen_len"] = g0
     return logits, cache

@@ -87,6 +87,36 @@ def flash(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill attention (admission path)
+# ---------------------------------------------------------------------------
+
+# route a chunk's score matrix through the blocked flash path above this
+# many C x S elements (below it the masked reference sdpa is cheaper)
+PREFILL_CHUNK_FLASH_ELEMS = 1 << 22
+
+
+def prefill_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            q_pos: jax.Array, k_pos: jax.Array,
+                            window: "int | jax.Array" = 0,
+                            softcap: float = 0.0) -> jax.Array:
+    """One prefill chunk's C queries against the slot's row cache.
+
+    q: (B, C, H, D); k/v: (B, S, KV, D) — the row cache with positions
+    [0, start + C) written (resident prefix + earlier chunks + this
+    chunk).  Garbage beyond is causally dead: every unwritten slot's
+    position exceeds every query's.  Causal + optional sliding window
+    (``window`` may be a traced per-layer scalar).  Large score matrices
+    route through the blocked flash path (Pallas when enabled); small
+    shapes use the masked reference sdpa — numerically interchangeable.
+    """
+    if q.shape[1] * k.shape[1] >= PREFILL_CHUNK_FLASH_ELEMS:
+        return flash(q, k, v, q_pos, k_pos, window, True, softcap)
+    from repro.layers.attention import make_mask, sdpa
+    mask = make_mask(q_pos, k_pos, "sliding", window)
+    return sdpa(q, k, v, mask, softcap)
+
+
+# ---------------------------------------------------------------------------
 # Decode attention (O(1) cache-hit step)
 # ---------------------------------------------------------------------------
 

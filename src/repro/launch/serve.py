@@ -17,6 +17,14 @@ prefix is resident map its pages instead of re-writing them — the
 shared prefix is stored once, writes copy-on-write (a page is writable
 iff its refcount is 1).
 
+``--prefill-chunk N`` (sessions mode) switches admission to the chunked
+KV-conditioned prefill: prompts are processed in fixed-size N-token
+chunks attending the KV already resident in the slot (adopted
+prefix-shared pages included), so prefill compiles are bounded by the
+chunk shape instead of one per prompt length, and with
+``--prefix-sharing`` a shared-prefix admission forwards only its
+unshared tail.  See docs/serving.md for the full admission lifecycle.
+
 Uniform batch (benchmark-style, same-length prompts)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
@@ -27,13 +35,20 @@ chunked zero-host-sync decode; prints each session's stream and checks
 it against single-session generation)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
-      --sessions 3 --gen 24 --slots 2 --layout paged --pool-pages 12
+      --sessions 3 --gen 24 --slots 2 --layout paged --page-size 16 \\
+      --pool-pages 12
 
 Shared-system-prompt demo (prefix sharing / CoW)::
 
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
       --sessions 4 --slots 4 --gen 16 --prompt-len 64 \\
       --layout paged --page-size 16 --prefix-sharing
+
+Chunked tail-only admission on top (bucketed prefill compiles)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \\
+      --sessions 4 --slots 4 --gen 16 --prompt-len 64 \\
+      --layout paged --page-size 16 --prefix-sharing --prefill-chunk 16
 """
 from __future__ import annotations
 
@@ -80,6 +95,20 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
         if args.layout not in ("paged", "paged_int8"):
             ap.error(f"--prefix-sharing shares pool PAGES; --layout "
                      f"{args.layout} has none (use paged or paged_int8)")
+    if args.prefill_chunk < 0:
+        ap.error(f"--prefill-chunk {args.prefill_chunk} must be positive "
+                 f"(0 disables chunked admission)")
+    if args.prefill_chunk:
+        if not args.sessions:
+            ap.error("--prefill-chunk shapes ADMISSION dispatches; the "
+                     "uniform batch has no admission path (its prefill "
+                     "is one fixed-shape dispatch already) — add "
+                     "--sessions N")
+        if args.layout in ("paged", "paged_int8") and \
+                args.prefill_chunk % args.page_size != 0:
+            ap.error(f"--prefill-chunk {args.prefill_chunk} must be a "
+                     f"multiple of --page-size {args.page_size} — "
+                     f"chunk-granular page writes cover whole pages")
     if args.layout not in ("paged", "paged_int8"):
         return
     if cfg.attention_mode == "tconst" and cfg.arch_type not in \
@@ -139,7 +168,8 @@ def run_sessions(cfg, api, params, args) -> int:
         prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
                    for n in lens]
 
-    decode = build_decode(cfg, _layout_spec(args))
+    decode = build_decode(cfg, _layout_spec(args),
+                          prefill_chunk=args.prefill_chunk or None)
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
@@ -196,6 +226,14 @@ def run_sessions(cfg, api, params, args) -> int:
     if admits:
         print(f"[serve] admissions: n={len(sched.admit_stats)} "
               f"warm median={np.median(admits) * 1e3:.2f}ms")
+    if sched.prefill_chunk:
+        tagged = sum(1 for s in sched.admit_stats if s.compiled)
+        fwd = [s.forward_tokens for s in sched.admit_stats]
+        print(f"[serve] chunked prefill (chunk={sched.prefill_chunk}): "
+              f"forward tokens per admission {fwd} "
+              f"(prompt lengths {[len(p) for p in prompts]}); "
+              f"{tagged} compile-tagged admission(s) across "
+              f"{len(set(len(p) for p in prompts))} distinct lengths")
     print(f"[serve] KV-cache bytes ({args.slots} slots, "
           f"{sched.layout.name} layout): {sched.kv_bytes()}")
 
@@ -246,6 +284,14 @@ def main(argv=None) -> int:
                          "(sessions mode, paged layouts): sessions get a "
                          "common system prompt whose pages are stored "
                          "once and mapped copy-on-write")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked KV-conditioned admission (sessions "
+                         "mode): prefill prompts in fixed-size chunks of "
+                         "N tokens (paged layouts: a page-size multiple) "
+                         "so compiles are bounded by the chunk shape, "
+                         "not the prompt length, and a prefix-shared "
+                         "admission forwards only its unshared tail; "
+                         "0 = one-shot full-prompt prefill")
     ap.add_argument("--sessions", type=int, default=0,
                     help="serve N streaming sessions (staggered admission, "
                          "variable prompt lengths) instead of one batch")

@@ -169,11 +169,16 @@ def _split_proj(z_all: jax.Array, dims: SSMDims):
 
 
 def causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
-                prev: Optional[jax.Array] = None
+                prev: Optional[jax.Array] = None,
+                valid_len: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, jax.Array]:
     """Depthwise causal conv1d.  xbc: (B, L, C); w: (K, C).
 
     prev: (B, K-1, C) trailing context from the previous segment (decode).
+    valid_len: optional (B,) — only positions ``[0, valid_len)`` are real
+    (chunked prefill pads the last chunk): the returned context window
+    then ends at ``valid_len`` instead of L, so trailing padding never
+    enters the next segment's conv state.
     Returns (out (B, L, C), new_prev (B, K-1, C)).
     """
     K = w.shape[0]
@@ -186,15 +191,29 @@ def causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
         out = out + xp[:, i:i + L].astype(jnp.float32) * \
             w[i].astype(jnp.float32)
     out = jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
-    return out, xp[:, L:]
+    if valid_len is None:
+        return out, xp[:, L:]
+    # window of the K-1 inputs preceding position valid_len: xp index j
+    # holds segment position j - (K-1), so the window is xp[vl : vl+K-1]
+    idx = valid_len[:, None] + jnp.arange(K - 1)[None]     # (B, K-1)
+    return out, jnp.take_along_axis(xp, idx[..., None], axis=1)
 
 
 def ssm_mixer(params: Params, x: jax.Array, cfg: ModelConfig,
               d_model: Optional[int] = None,
               state: Optional[dict] = None,
+              valid_len: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[dict]]:
     """Mamba2 mixer. x: (B, L, d). If ``state`` is given (keys: ssm, conv),
-    runs in stepwise/streaming mode and returns the updated state."""
+    runs in stepwise/streaming mode and returns the updated state.
+
+    valid_len: optional (B,) — positions ``>= valid_len`` are padding
+    (the chunked prefill's trailing pad): their ``dt`` is forced to 0,
+    which makes the SSD update an exact identity (``exp(0·a) = 1`` decay,
+    zero input contribution), and the conv context window ends at
+    ``valid_len`` — so the returned state is the state after the REAL
+    tokens, bit-for-bit.  Padding rows' outputs are garbage (discarded
+    by the caller)."""
     from repro.sharding.rules import shard_act
     dims = ssm_dims(cfg, d_model)
     dtype = x.dtype
@@ -204,11 +223,15 @@ def ssm_mixer(params: Params, x: jax.Array, cfg: ModelConfig,
     z, xbc, dt_raw = _split_proj(z_all, dims)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
                          params["dt_bias"].astype(jnp.float32))  # (B, L, H)
+    if valid_len is not None:
+        dt = jnp.where(jnp.arange(L)[None, :, None] < valid_len[:, None,
+                                                                None],
+                       dt, 0.0)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))
 
     prev_conv = state["conv"] if state is not None else None
     xbc, new_conv = causal_conv(xbc, params["conv_w"], params["conv_b"],
-                                prev_conv)
+                                prev_conv, valid_len=valid_len)
     xs = xbc[..., :dims.d_inner].reshape(B, L, dims.n_heads, dims.head_dim)
     b = xbc[..., dims.d_inner:dims.d_inner + dims.n_state]
     c = xbc[..., dims.d_inner + dims.n_state:]

@@ -235,8 +235,8 @@ class DecodeState:
 
     # -- slot surgery -------------------------------------------------------
     def with_slot(self, slot: jax.Array, row: "DecodeState",
-                  page_write_mask: Optional[jax.Array] = None
-                  ) -> "DecodeState":
+                  page_write_mask: Optional[jax.Array] = None,
+                  exclude: Tuple[str, ...] = ()) -> "DecodeState":
         """Scatter a single-row state (batch size 1, dense layout) into
         slot ``slot``.  Bookkeeping is a per-field row write; kv goes
         through the layout (paged: page-map surgery touching only the
@@ -244,7 +244,9 @@ class DecodeState:
         restricts the paged write to the UNSHARED tail of the slot's
         page table — the copy-on-write admission contract: a page whose
         content is already resident (prefix sharing, refcount > 1) is
-        mapped, never rewritten."""
+        mapped, never rewritten.  ``exclude`` skips kv fields by base
+        name — the chunked prefill streams its length-axis KV in via
+        :meth:`write_span` and finalises with everything else."""
         bk = dict(self.bookkeeping)
         for name, src in row.bookkeeping.items():
             if name.startswith(LT.LAYOUT_BK_PREFIX):
@@ -255,8 +257,32 @@ class DecodeState:
         dense_row = row.layout.unpack(row.kv, row.bookkeeping, row.axes)
         kv = self.layout.write_slot(self.kv, self.bookkeeping, slot,
                                     dense_row, self.axes,
-                                    page_mask=page_write_mask)
+                                    page_mask=page_write_mask,
+                                    exclude=exclude)
         return DecodeState(kv, bk, self.axes, self.layout)
+
+    def read_slot(self, slot: jax.Array) -> Dict[str, Any]:
+        """Dense logical kv row (batch size 1) of slot ``slot``, read
+        through the layout (paged: gathered via the slot's OWN page-table
+        row — adopted prefix-shared pages included; int8: dequantized).
+        The KV-conditioned chunked prefill seeds its row cache from this
+        so tail chunks attend the resident KV.  Admission path only."""
+        return self.layout.read_slot(self.kv, self.bookkeeping, self.axes,
+                                     slot)
+
+    def write_span(self, slot: jax.Array, fields: Dict[str, Any],
+                   length_axes: Dict[str, int], start: jax.Array,
+                   min_page: Optional[jax.Array] = None) -> "DecodeState":
+        """Chunk-granular slot write: scatter one prefill chunk's
+        positions ``[start, start + C)`` of the given length-axis fields
+        (dense logical, batch 1) into the slot through the layout —
+        paged layouts write exactly the covered pages of the slot's
+        table (entries below ``min_page`` — adopted shared pages — are
+        redirected to TRASH), quantizing layouts quantize on write."""
+        kv = self.layout.write_span(self.kv, self.bookkeeping, slot, fields,
+                                    length_axes, self.axes, start,
+                                    min_page=min_page)
+        return DecodeState(kv, self.bookkeeping, self.axes, self.layout)
 
     def where_rows(self, rows: jax.Array, other: "DecodeState"
                    ) -> "DecodeState":
@@ -397,6 +423,163 @@ class DecodeAPI:
         decision, no host round-trip."""
         return self.sync_rows(params, state, self.sync_mask(state))
 
+    # chunked KV-conditioned prefill (admission path) ------------------------
+    def supports_chunked_prefill(self, extras: Optional[Dict[str, Any]]
+                                 = None) -> bool:
+        """True when this family (with these per-request extras) can run
+        admission through :meth:`prefill_into_slot_chunked`."""
+        return False
+
+    def _chunk_resident_start(self, resident_len: int) -> int:
+        """Where the chunk loop may start given a resident shared
+        prefix.  KV-only families resume after the adopted pages
+        (tail-only compute); families carrying RECURRENT state (ssm /
+        conv — a function of the full prompt, not reconstructible from
+        the adopted KV) must forward from position 0 — adopted pages
+        still save the writes (``min_page``) and the bytes, just not
+        the tail compute."""
+        return resident_len
+
+    def chunked_prefill_fits(self, prompt_len: int, resident_len: int,
+                             chunk: int, max_len: int) -> bool:
+        """True when the chunk grid over this prompt stays inside the
+        ``max_len`` buffers.  The last chunk's padding spills up to
+        ``chunk - 1`` positions past the prompt (harmless: overwritten
+        by decode appends, masked meanwhile) — but it must not spill
+        past ``max_len``, where ``dynamic_update_slice`` would CLAMP the
+        write onto earlier, real positions.  The scheduler falls back to
+        one-shot admission for the rare prompt this excludes."""
+        start0 = min(self._chunk_resident_start(resident_len),
+                     (prompt_len - 1) // chunk * chunk)
+        n_chunks = -(-(prompt_len - start0) // chunk)
+        return start0 + n_chunks * chunk <= max_len
+
+    def prefill_into_slot_chunked(self, params, state: DecodeState,
+                                  slot: jax.Array, tokens: jax.Array,
+                                  extras: Optional[Dict[str, Any]] = None,
+                                  page_write_mask: Optional[jax.Array]
+                                  = None, resident_len: int = 0,
+                                  chunk: int = 32
+                                  ) -> Tuple[jax.Array, DecodeState,
+                                             Dict[str, int]]:
+        """Chunked, KV-conditioned admission: process the prompt in
+        fixed-size chunks of ``chunk`` tokens, each chunk attending
+        against the KV already resident for this slot — earlier chunks
+        AND, when ``resident_len > 0``, the prefix-shared pages the
+        scheduler adopted into the slot's page table — so forward
+        compute scales with the *unshared tail* rather than the full
+        prompt, and every dispatch has a fixed shape (one compile per
+        chunk shape instead of one per prompt length).
+
+        Host-side driver: loops jitted fixed-shape steps (seed → gather
+        resident → per-chunk forward + chunk-granular ``write_span`` →
+        finalize).  ``resident_len`` must be page-aligned (it is
+        ``adopted_pages * page_size`` by construction); when it covers
+        the whole prompt, the driver still forwards the final chunk for
+        the admission logits but redirects its page writes to TRASH
+        (``min_page``) so adopted pages are never written.  Returns
+        ``(logits (V,), state, info)`` with ``info['forward_tokens']``
+        the number of prompt positions actually forwarded (padded to the
+        chunk grid) — the tail-only accounting asserted in tests and
+        recorded in ``BENCH_inference.json``.
+
+        Streams are token-identical to the one-shot ``prefill_into_slot``
+        admission (float-associativity noise only; int8 layouts within
+        the documented quantization tolerance).
+        """
+        assert self.supports_chunked_prefill(extras), \
+            "this family/extras combination requires one-shot admission"
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        L = int(tokens.shape[0])
+        assert L >= 1, "cannot admit an empty prompt"
+        chunk = int(chunk)
+        fns = _chunked_jits(self)
+        max_len = self._state_max_len(state)
+        # >= one chunk must be forwarded for the admission logits even
+        # when the page-aligned resident prefix covers the whole prompt
+        start0 = int(min(self._chunk_resident_start(resident_len),
+                         (L - 1) // chunk * chunk))
+        n_chunks = -(-(L - start0) // chunk)
+        buf = np.zeros((n_chunks * chunk,), np.int32)
+        buf[:L - start0] = tokens[start0:]
+        row = fns["seed"](params, extras, max_len)
+        min_page = None
+        if resident_len > 0 and isinstance(state.layout, LT.PagedLayout):
+            # adopted (refcount > 1) pages are never written, even when
+            # the chunk loop recomputes their positions
+            min_page = np.int32(resident_len // state.layout.page)
+        if start0 > 0:
+            # chunks resume mid-prompt: seed the row cache's resident
+            # prefix from the slot's adopted pages so they can attend it
+            row = fns["gather"](state, slot, row, np.int32(resident_len))
+        logits = None
+        n_valid = np.int32(L)
+        for j in range(n_chunks):
+            start = np.int32(start0 + j * chunk)
+            ctoks = jnp.asarray(buf[j * chunk:(j + 1) * chunk])[None]
+            logits, row, chunk_kv = fns["chunk"](params, row, ctoks, start,
+                                                 n_valid)
+            if chunk_kv:
+                state = fns["span"](state, slot, chunk_kv, start, min_page)
+        last_start = start0 + (n_chunks - 1) * chunk
+        out = logits[0, (L - 1) - last_start]
+        state = fns["finalize"](state, slot, row, np.int32(L))
+        return out, state, {"forward_tokens": n_chunks * chunk,
+                            "chunks": n_chunks}
+
+    # chunked-prefill hooks (families using the generic driver implement
+    # these; TConst overrides the driver itself with the bucketed path) -----
+    def _state_max_len(self, state: DecodeState) -> int:
+        raise NotImplementedError
+
+    def _chunk_seed_row(self, params, extras, max_len: int
+                        ) -> Dict[str, Any]:
+        """Fresh dense row cache (batch 1) before any chunk runs."""
+        raise NotImplementedError
+
+    def _chunk_fn(self, params, row: Dict[str, Any], tokens: jax.Array,
+                  start: jax.Array, n_valid: jax.Array):
+        """One fixed-shape chunk forward (``n_valid`` = total prompt
+        length, so recurrent-state families can exclude the last chunk's
+        padding): returns (logits (1, C, V), updated row, chunk_kv — the
+        chunk's length-axis KV)."""
+        raise NotImplementedError
+
+    def _chunk_gather_resident(self, state: DecodeState, slot: jax.Array,
+                               row: Dict[str, Any], resident_len: jax.Array
+                               ) -> Dict[str, Any]:
+        """Seed the row cache's positions [0, resident_len) from the
+        slot's resident KV (adopted prefix-shared pages included, read
+        through the layout) so tail chunks attend it."""
+        dense = state.read_slot(slot)
+        out = dict(row)
+        for f, la in self._LENGTH_AXES.items():
+            if f not in row:
+                continue
+            S = row[f].shape[la]
+            keep = (jnp.arange(S) < resident_len).reshape(
+                (1,) * la + (S,) + (1,) * (row[f].ndim - la - 1))
+            out[f] = jnp.where(keep, dense[f].astype(row[f].dtype), row[f])
+        return out
+
+    def _chunk_span_write(self, state: DecodeState, slot: jax.Array,
+                          chunk_kv: Dict[str, Any], start: jax.Array,
+                          min_page) -> DecodeState:
+        return state.write_span(slot, chunk_kv, self._LENGTH_AXES, start,
+                                min_page=min_page)
+
+    def _chunk_finalize(self, state: DecodeState, slot: jax.Array,
+                        row: Dict[str, Any], n_valid: jax.Array
+                        ) -> DecodeState:
+        """Write the row's bookkeeping + non-length kv (recurrent state,
+        cross KV); the length-axis KV was already streamed in by the
+        per-chunk ``write_span`` calls."""
+        row = dict(row)
+        row["len"] = jnp.full((1,), n_valid, jnp.int32)
+        row["done"] = jnp.zeros((1,), bool)
+        return state.with_slot(slot, self._row_state(row),
+                               exclude=tuple(self._LENGTH_AXES))
+
     # prefix-sharing surface (host-side hooks for the scheduler) ------------
     def stable_prefix_len(self, prompt_len: int) -> int:
         """Longest prompt prefix whose paged KV is fully written at
@@ -464,6 +647,36 @@ class DecodeAPI:
                 "or leave pool_pages=None")
 
 
+# Per-decode jitted chunked-prefill steps.  Keyed by the (frozen,
+# value-hashable) DecodeAPI instance, so every scheduler/engine sharing an
+# equal config+layout reuses ONE set of compiled chunk shapes — the
+# bucketing that collapses prefill compiles from one-per-prompt-length to
+# one-per-(chunk-shape x masked-variant).
+_CHUNK_JITS: Dict[Any, Dict[str, Any]] = {}
+
+
+def _chunked_jits(decode: "DecodeAPI") -> Dict[str, Any]:
+    # the fns are chunk-size-agnostic (the size arrives via call-time
+    # shapes), so normalise prefill_chunk out of the key: an Engine and
+    # a scheduler that differ only in the default knob share one set
+    key = dataclasses.replace(decode, prefill_chunk=None)
+    fns = _CHUNK_JITS.get(key)
+    if fns is None:
+        if hasattr(key, "_chunk_bucketed"):
+            fns = {"bucketed": jax.jit(key._chunk_bucketed)}
+        else:
+            fns = {
+                "seed": jax.jit(key._chunk_seed_row,
+                                static_argnums=(2,)),
+                "gather": jax.jit(key._chunk_gather_resident),
+                "chunk": jax.jit(key._chunk_fn),
+                "span": jax.jit(key._chunk_span_write),
+                "finalize": jax.jit(key._chunk_finalize),
+            }
+        _CHUNK_JITS[key] = fns
+    return fns
+
+
 @dataclasses.dataclass(frozen=True)
 class TConstDecode(DecodeAPI):
     """Paper §4 serving: O(1) cache-hit steps, periodic O(N) resync.
@@ -486,6 +699,7 @@ class TConstDecode(DecodeAPI):
 
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
+    prefill_chunk: Optional[int] = None
 
     _KV_KEYS = TC.KV_KEYS
     _AXES = TC.CACHE_BATCH_AXES
@@ -514,6 +728,41 @@ class TConstDecode(DecodeAPI):
                                  mode=self.mode)
         return logits[0], state.with_slot(slot, self._row_state(row),
                                           page_write_mask=page_write_mask)
+
+    # chunked admission: the TConst prefill is resync (already a fixed
+    # max_len-shaped dispatch) + a generation-window pass, so "chunking"
+    # here means BUCKETING — the whole admission becomes one fixed-shape
+    # dispatch (prompt padded into the token buffer, window pass padded
+    # to W_og with validity masks): ONE compile for every prompt length.
+    # Tail-only compute does NOT apply: the paper's resync rebuilds the
+    # compressed ctx KV from the full history by construction (content-
+    # addressed ctx-KV reuse is the ROADMAP open item).
+    def supports_chunked_prefill(self, extras=None):
+        return True
+
+    def chunked_prefill_fits(self, prompt_len, resident_len, chunk,
+                             max_len):
+        return True          # one max_len-shaped dispatch: always fits
+
+    def prefill_into_slot_chunked(self, params, state, slot, tokens,
+                                  extras=None, page_write_mask=None,
+                                  resident_len=0, chunk=32):
+        del extras, resident_len, chunk       # see class comment above
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        L = int(tokens.shape[0])
+        max_len = state.bookkeeping["tokens"].shape[1]
+        buf = np.zeros((1, max_len), np.int32)
+        buf[0, :L] = tokens
+        logits, state = _chunked_jits(self)["bucketed"](
+            params, state, slot, jnp.asarray(buf),
+            jnp.full((1,), L, jnp.int32), page_write_mask)
+        return logits, state, {"forward_tokens": max_len, "chunks": 1}
+
+    def _chunk_bucketed(self, params, state, slot, buf, n_valid, mask):
+        logits, row = TC.prefill_bucketed(params, buf, n_valid, self.cfg,
+                                          mode=self.mode)
+        return logits[0], state.with_slot(slot, self._row_state(row),
+                                          page_write_mask=mask)
 
     def stable_prefix_len(self, prompt_len: int) -> int:
         """The trailing 1..W_og prompt tokens live in the dense gen
@@ -581,6 +830,7 @@ class DenseDecode(DecodeAPI):
 
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
+    prefill_chunk: Optional[int] = None
 
     _KV_KEYS = LM.KV_KEYS
     _AXES = LM.CACHE_BATCH_AXES
@@ -624,6 +874,31 @@ class DenseDecode(DecodeAPI):
                                               token, self.cfg)
         return logits, state.absorb(out)
 
+    # chunked admission hooks (generic driver in DecodeAPI) -----------------
+    def supports_chunked_prefill(self, extras=None):
+        # VLM vision positions depend on a prompt-length-shaped mask (one
+        # compile per length regardless) — those admissions stay one-shot
+        return not (extras and "vision_embeds" in extras)
+
+    def _chunk_resident_start(self, resident_len):
+        # ssm/conv recurrent state is a function of the FULL prompt and
+        # cannot be reconstructed from adopted KV pages: recurrent
+        # families forward from 0 (adopted pages still save writes/bytes)
+        if self.cfg.arch_type == "ssm" or self.cfg.hybrid_parallel:
+            return 0
+        return resident_len
+
+    def _state_max_len(self, state):
+        return self._max_len(state, 0)
+
+    def _chunk_seed_row(self, params, extras, max_len):
+        del params, extras
+        return LM.init_kv_cache(self.cfg, 1, max_len)
+
+    def _chunk_fn(self, params, row, tokens, start, n_valid):
+        return LM.lm_prefill_chunk(params, row, tokens, start, n_valid,
+                                   self.cfg)
+
 
 @dataclasses.dataclass(frozen=True)
 class EncDecDecode(DecodeAPI):
@@ -632,6 +907,7 @@ class EncDecDecode(DecodeAPI):
 
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
+    prefill_chunk: Optional[int] = None
 
     _KV_KEYS = ED.KV_KEYS
     _AXES = ED.CACHE_BATCH_AXES
@@ -668,17 +944,45 @@ class EncDecDecode(DecodeAPI):
                                                   token, self.cfg)
         return logits, state.absorb(out)
 
+    # chunked admission hooks: the encoder runs ONCE at seed time (fixed
+    # encoder_seq shape — one compile), pre-projecting the cross K/V the
+    # decoder chunks then attend; only the growing self-attention KV is
+    # chunk-written.
+    def supports_chunked_prefill(self, extras=None):
+        return True
 
-def build_decode(cfg: ModelConfig, layout: Any = None) -> DecodeAPI:
+    def _state_max_len(self, state):
+        return state.dense_shapes()["k"].shape[2]
+
+    def _chunk_seed_row(self, params, extras, max_len):
+        if not extras or "audio_feats" not in extras:
+            raise ValueError(
+                "encoder-decoder sessions need extras={'audio_feats': "
+                "(T_enc, frontend_dim)} at submission")
+        return ED.encdec_seed_cache(params, extras["audio_feats"][None],
+                                    self.cfg, max_len)
+
+    def _chunk_fn(self, params, row, tokens, start, n_valid):
+        return ED.encdec_prefill_chunk(params, row, tokens, start, n_valid,
+                                       self.cfg)
+
+
+def build_decode(cfg: ModelConfig, layout: Any = None,
+                 prefill_chunk: Optional[int] = None) -> DecodeAPI:
     """Build the decode protocol for ``cfg`` with a cache layout chosen
     by ``layout`` ("dense" | "paged" | "int8" | "paged_int8" |
-    LayoutSpec | None)."""
+    LayoutSpec | None).  ``prefill_chunk`` is the default chunk size for
+    chunked KV-conditioned admission (None = one-shot full-prompt
+    prefill); the scheduler reads it unless given its own."""
     spec = LT.as_spec(layout)
+    if prefill_chunk is not None and prefill_chunk < 1:
+        raise ValueError("prefill_chunk must be positive (or None for "
+                         "one-shot admission)")
     if _is_tconst(cfg):
-        return TConstDecode(cfg, spec)
+        return TConstDecode(cfg, spec, prefill_chunk)
     if cfg.is_encdec:
-        return EncDecDecode(cfg, spec)
-    return DenseDecode(cfg, spec)
+        return EncDecDecode(cfg, spec, prefill_chunk)
+    return DenseDecode(cfg, spec, prefill_chunk)
 
 
 # ---------------------------------------------------------------------------

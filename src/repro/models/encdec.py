@@ -236,6 +236,73 @@ def encdec_prefill(params: Params, tokens: jax.Array, audio_feats: jax.Array,
     return logits, cache
 
 
+def encdec_seed_cache(params: Params, audio_feats: jax.Array,
+                      cfg: ModelConfig, max_len: int) -> Dict[str, Any]:
+    """Seed step of the chunked prefill: run the encoder ONCE (fixed
+    ``encoder_seq`` shape — one compile regardless of prompt length) and
+    pre-project the per-layer cross K/V the decoder chunks attend.  The
+    decoder self-attention KV starts empty and is filled chunk by
+    chunk."""
+    memory = encode(params, audio_feats, cfg)
+    cache = init_encdec_cache(cfg, audio_feats.shape[0], max_len)
+
+    def body(_, layer):
+        return None, A.project_kv(layer["cross"], memory)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec_layers"])
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    return cache
+
+
+def encdec_prefill_chunk(params: Params, row: Dict[str, Any],
+                         tokens: jax.Array, start: jax.Array,
+                         n_valid: jax.Array, cfg: ModelConfig
+                         ) -> Tuple[jax.Array, Dict[str, Any],
+                                    Dict[str, Any]]:
+    """One fixed-shape chunk of the chunked decoder prefill: the chunk's
+    C queries self-attend the row cache's resident positions [0, start)
+    plus the chunk (causal, true positions — matches the one-shot
+    :func:`encdec_prefill` up to float association) and cross-attend the
+    pre-projected encoder memory from :func:`encdec_seed_cache`.
+    Returns (logits (B, C, V), row, chunk_kv)."""
+    from repro.kernels import ops
+    del n_valid              # no recurrent state; padding is causally dead
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B, C = tokens.shape
+    x = E.embed_tokens(params["embed"], tokens, dtype)
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(x, xs):
+        layer, k_row, v_row, ck, cv = xs
+        xn = layernorm(layer["ln1"], x, eps)
+        q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k = R.apply_rope(k, cos, sin)
+        k_row = jax.lax.dynamic_update_slice_in_dim(
+            k_row, k.astype(k_row.dtype), start, axis=1)
+        v_row = jax.lax.dynamic_update_slice_in_dim(
+            v_row, v.astype(v_row.dtype), start, axis=1)
+        kpos = jnp.arange(k_row.shape[1], dtype=jnp.int32)
+        # plain causal, like the one-shot prefill's teacher-forced pass
+        o = ops.prefill_chunk_attention(q, k_row, v_row, pos, kpos, 0, 0.0)
+        x = x + A.out_proj(layer["attn"], o, dtype)
+        xc = layernorm(layer["lnc"], x, eps)
+        x = x + A.cross_attend_cached(layer["cross"], xc, ck, cv, None)
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, (k_row, v_row, k, v)
+
+    x, (k_rows, v_rows, kc, vc) = jax.lax.scan(
+        body, x, (params["dec_layers"], row["k"], row["v"],
+                  row["cross_k"], row["cross_v"]))
+    row = dict(row)
+    row["k"], row["v"] = k_rows, v_rows
+    x = layernorm(params["dec_norm"], x, eps)
+    logits = E.lm_head(params["embed"], x)
+    return logits, row, {"k": kc, "v": vc}
+
+
 def encdec_decode_step_views(params: Params, cache: Dict[str, Any],
                              token: jax.Array, cfg: ModelConfig
                              ) -> Tuple[jax.Array, Dict[str, Any]]:

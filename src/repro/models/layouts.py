@@ -503,17 +503,61 @@ class DenseLayout:
     def write_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
                    slot: jax.Array, dense_row: Dict[str, Any],
                    axes: Dict[str, int],
-                   page_mask: Optional[jax.Array] = None) -> Dict[str, Any]:
+                   page_mask: Optional[jax.Array] = None,
+                   exclude: Tuple[str, ...] = ()) -> Dict[str, Any]:
         """Scatter a 1-slot dense row into physical slot ``slot``.
         ``page_mask`` is a paged-layout concern (tail-only admission
         writes under prefix sharing) — ignored for non-paged layouts,
-        whose slots are exclusively owned by construction."""
+        whose slots are exclusively owned by construction.  Fields whose
+        base name is in ``exclude`` come through untouched (the chunked
+        prefill streams length-axis KV in via :meth:`write_span`, so the
+        finalising scatter writes only the remaining fields)."""
         packed = self.pack(dense_row, bk, axes)
         out = {}
         for f, dst in kv.items():
+            if _base_name(f) in exclude:
+                out[f] = dst
+                continue
             src = packed[f].astype(dst.dtype)
             out[f] = jax.lax.dynamic_update_slice_in_dim(
                 dst, src, slot, axis=self._axis(f, axes))
+        return out
+
+    # -- chunk-granular access (chunked prefill) ----------------------------
+    def read_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
+                  axes: Dict[str, int], slot: jax.Array) -> Dict[str, Any]:
+        """Dense logical row (batch size 1) of slot ``slot`` — the
+        KV-conditioned chunked prefill seeds its row cache from this
+        (adopted prefix-shared pages included) so tail chunks attend the
+        resident KV.  O(row) memory; an admission-path primitive, never
+        on the decode hot path."""
+        row = {f: jax.lax.dynamic_slice_in_dim(v, slot, 1,
+                                               self._axis(f, axes))
+               for f, v in kv.items()}
+        return self.unpack(row, bk, axes)
+
+    def write_span(self, kv: Dict[str, Any], bk: Dict[str, Any],
+                   slot: jax.Array, fields: Dict[str, Any],
+                   length_axes: Dict[str, int], axes: Dict[str, int],
+                   start: jax.Array,
+                   min_page: Optional[jax.Array] = None) -> Dict[str, Any]:
+        """Write one prefill chunk's positions ``[start, start + C)`` of
+        the given length-axis ``fields`` (dense logical, batch size 1)
+        into slot ``slot`` — the chunk-granular page write.  For
+        non-paged layouts this is a positional ``dynamic_update_slice``
+        (quantizing layouts quantize the chunk on write); ``min_page``
+        only applies to the paged override."""
+        packed = self.pack(fields, bk, axes)
+        out = dict(kv)
+        for f, v in packed.items():
+            if f not in kv:
+                continue
+            dst = kv[f]
+            starts = [0] * dst.ndim
+            starts[self._axis(f, axes)] = slot
+            starts[length_axes[_base_name(f)]] = start
+            out[f] = jax.lax.dynamic_update_slice(
+                dst, v.astype(dst.dtype), tuple(starts))
         return out
 
 
@@ -745,20 +789,26 @@ class PagedLayout(DenseLayout):
                 out[f] = where_rows(page_rows, new_kv[f], old_kv[f], la - 1)
         return out
 
-    def write_slot(self, kv, bk, slot, dense_row, axes, page_mask=None):
+    def write_slot(self, kv, bk, slot, dense_row, axes, page_mask=None,
+                   exclude=()):
         """Page-map surgery: only the slot's own pages are touched.
 
         ``page_mask`` (pps,) bool selects which of the slot's table
         entries are written; masked-out entries are redirected to the
         TRASH page, so a prefix-SHARED page (refcount > 1, content
         already resident and correct) is never written by admission —
-        the copy-on-write contract's tail-only prefill write."""
+        the copy-on-write contract's tail-only prefill write.
+        ``exclude`` skips fields by base name (chunked prefill: the
+        length-axis KV was already streamed in by :meth:`write_span`)."""
         pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)      # (pps,)
         if page_mask is not None:
             pt_row = jnp.where(page_mask, pt_row, self.trash)
         packed = self._quant_pack(dense_row)
         out = {}
         for f, dst in kv.items():
+            if _base_name(f) in exclude:
+                out[f] = dst
+                continue
             la = self._length_axis(f)
             src = packed[f].astype(dst.dtype)
             if la is None:
@@ -770,6 +820,72 @@ class PagedLayout(DenseLayout):
                                          keepdims=False)
             idx = (slice(None),) * (la - 1) + (pt_row,)
             out[f] = dst.at[idx].set(pages)
+        return out
+
+    # -- chunk-granular access (chunked prefill) ----------------------------
+    def read_slot(self, kv, bk, axes, slot):
+        """Dense logical row of slot ``slot``, gathered through its OWN
+        page-table row only — other slots' pages are never touched.
+        Table entries at TRASH read garbage; the chunked-prefill seeding
+        masks everything beyond the resident prefix."""
+        pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)       # (pps,)
+        staged = {}
+        for f, v in kv.items():
+            la = self._length_axis(f)
+            if la is None:
+                staged[f] = jax.lax.dynamic_slice_in_dim(
+                    v, slot, 1, self._axis(f, axes))
+                continue
+            g = jnp.take(v, pt_row, axis=la - 1)   # (..., pps, page, rest)
+            g = jnp.expand_dims(g, la - 1)         # batch dim of 1
+            merged = g.reshape(g.shape[:la] + (-1,) + g.shape[la + 2:])
+            staged[f] = jax.lax.slice_in_dim(merged, 0, self.max_len,
+                                             axis=la)
+        out = {}
+        for f, v in staged.items():
+            if f.endswith("__q"):
+                out[f[:-3]] = dequantize_int8(v, staged[f[:-3] + "__scale"],
+                                              jnp.dtype(self.dtype))
+            elif not f.endswith("__scale"):
+                out[f] = v
+        return out
+
+    def write_span(self, kv, bk, slot, fields, length_axes, axes, start,
+                   min_page=None):
+        """THE chunk-granular page write: a prefill chunk covering
+        positions ``[start, start + C)`` — ``start`` page-aligned, ``C``
+        a page-size multiple, so the span is exactly ``C // page`` whole
+        pages of the slot's table — is scattered onto those pool pages
+        (int8 pools quantize on write, scales ride along).  Table
+        entries below ``min_page`` (pages ADOPTED from the prefix map,
+        refcount > 1) are redirected to TRASH: a chunked admission that
+        recomputes part of a resident prefix (e.g. a fully-resident
+        prompt still needs one chunk forwarded for its logits) can never
+        violate the copy-on-write invariant."""
+        pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)       # (pps,)
+        out = dict(kv)
+        for f, v in self._quant_pack(fields).items():
+            if f not in kv:
+                continue
+            dst = kv[f]
+            la = self._length_axis(f)
+            assert la is not None, \
+                (f, "write_span takes length-axis fields only")
+            C = v.shape[la]
+            assert C % self.page == 0, \
+                (f, C, self.page, "chunk must be a page-size multiple")
+            m = C // self.page
+            first = start // self.page
+            pages = jax.lax.dynamic_slice_in_dim(pt_row, first, m)
+            if min_page is not None:
+                pages = jnp.where(first + jnp.arange(m) >= min_page,
+                                  pages, self.trash)
+            vv = jax.lax.index_in_dim(v.astype(dst.dtype), 0, axis=la - 1,
+                                      keepdims=False)
+            vv = vv.reshape(vv.shape[:la - 1] + (m, self.page)
+                            + vv.shape[la:])
+            idx = (slice(None),) * (la - 1) + (pages,)
+            out[f] = dst.at[idx].set(vv)
         return out
 
     # -- copy-on-write forking ----------------------------------------------

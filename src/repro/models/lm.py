@@ -396,6 +396,118 @@ def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
                     for k, v in out.items()}
 
 
+def lm_prefill_chunk(params: Params, row: Dict[str, Any],
+                     tokens: jax.Array, start: jax.Array,
+                     n_valid: jax.Array, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, Dict[str, Any], Dict[str, Any]]:
+    """One fixed-shape chunk of the chunked (KV-conditioned) prefill.
+
+    ``row`` is the dense (batch 1) row cache: k/v buffers with positions
+    ``[0, start)`` already written — the resident prefix seeded from
+    adopted prefix-shared pages plus every earlier chunk — and the
+    ssm/conv recurrent state advanced to ``start``.  The chunk's C
+    queries attend those resident positions AND the chunk itself
+    (causal / per-layer sliding windows, positions are true token
+    positions, so the result matches the one-shot :func:`lm_prefill` up
+    to float association); its K/V is appended into the row cache and
+    also returned per length-axis field for the chunk-granular
+    ``write_span`` into the slot's layout.
+
+    tokens: (B, C) int32 (trailing zero padding allowed — padded
+    positions sit beyond every real query causally and beyond ``len``
+    afterwards, and ``n_valid`` — the TOTAL prompt length — keeps them
+    out of the recurrent ssm/conv state); start: traced scalar int32.
+    Returns (logits (B, C, V), row, chunk_kv {field: (layers, B, C,
+    KV, D)}).
+    """
+    from repro.kernels import ops
+    from repro.sharding.rules import shard_act
+    B, C = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    x = shard_act(E.embed_tokens(params["embed"], tokens, dtype))
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    cos, sin = _rope_tables(cfg, pos, None)
+    windows = jnp.asarray(layer_windows(cfg))
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    has_attn = cfg.arch_type != "ssm"
+    has_ssm = cfg.arch_type == "ssm" or cfg.hybrid_parallel
+    # real tokens in THIS chunk (the last chunk is zero-padded)
+    in_chunk = jnp.clip(n_valid - start, 0, C)
+    vl = jnp.broadcast_to(in_chunk, (B,))
+    row = dict(row)
+
+    def chunk_layer(layer, x, window, moe, k_row=None, v_row=None,
+                    ssm_st=None):
+        xn = rmsnorm(layer["ln1"], x, eps)
+        new_st = None
+        ssm_out = None
+        if ssm_st is not None:
+            ssm_out, new_st = S.ssm_mixer(layer["ssm"], xn, cfg,
+                                          state=ssm_st, valid_len=vl)
+        if not has_attn:
+            return x + ssm_out, None, None, None, None, new_st
+        q, k, v = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k = R.apply_rope(k, cos, sin)
+        k_row = jax.lax.dynamic_update_slice_in_dim(
+            k_row, k.astype(k_row.dtype), start, axis=1)
+        v_row = jax.lax.dynamic_update_slice_in_dim(
+            v_row, v.astype(v_row.dtype), start, axis=1)
+        kpos = jnp.arange(k_row.shape[1], dtype=jnp.int32)
+        o = ops.prefill_chunk_attention(q, k_row, v_row, pos, kpos,
+                                        window, cfg.logit_softcap)
+        out = A.out_proj(layer["attn"], o, dtype)
+        if cfg.hybrid_parallel:
+            out = (out + ssm_out) * 0.5
+        x = x + out
+        f, _ = _ffn(layer, rmsnorm(layer["ln2"], x, eps), cfg, moe)
+        return x + f, k_row, v_row, k, v, new_st
+
+    chunk_kv: Dict[str, Any] = {}
+    dk_c, dv_c = [], []
+    for i, layer in enumerate(params.get("dense_layers", [])):
+        x, kr, vr, kc, vc, _ = chunk_layer(
+            layer, x, windows[i], False,
+            row["dense_k"][i], row["dense_v"][i])
+        row["dense_k"] = row["dense_k"].at[i].set(kr)
+        row["dense_v"] = row["dense_v"].at[i].set(vr)
+        dk_c.append(kc)
+        dv_c.append(vc)
+    if dk_c:
+        chunk_kv["dense_k"] = jnp.stack(dk_c)
+        chunk_kv["dense_v"] = jnp.stack(dv_c)
+
+    xs: Dict[str, Any] = {"layer": params["layers"],
+                          "window": windows[n_dense:]}
+    if has_attn:
+        xs["k"], xs["v"] = row["k"], row["v"]
+    if has_ssm:
+        xs["ssm"], xs["conv"] = row["ssm"], row["conv"]
+
+    def body(x, xs_i):
+        st = {"ssm": xs_i["ssm"], "conv": xs_i["conv"]} if has_ssm else None
+        x, kr, vr, kc, vc, new_st = chunk_layer(
+            xs_i["layer"], shard_act(x), xs_i["window"], cfg.is_moe,
+            xs_i.get("k"), xs_i.get("v"), st)
+        ys = {}
+        if has_attn:
+            ys.update(k=kr, v=vr, kc=kc, vc=vc)
+        if has_ssm:
+            ys.update(ssm=new_st["ssm"], conv=new_st["conv"])
+        return x, ys
+
+    x, ys = jax.lax.scan(body, x, xs)
+    if has_attn:
+        row["k"], row["v"] = ys["k"], ys["v"]
+        chunk_kv["k"], chunk_kv["v"] = ys["kc"], ys["vc"]
+    if has_ssm:
+        row["ssm"], row["conv"] = ys["ssm"], ys["conv"]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x, cfg.logit_softcap)
+    return logits, row, chunk_kv
+
+
 def lm_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
                max_len: int,
                positions3: Optional[jax.Array] = None,

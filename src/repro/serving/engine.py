@@ -56,6 +56,12 @@ class StepStats:
     # length, ...).  Throughput aggregation must exclude these entries
     # (or medianize) — BENCH_inference.json numbers do.
     compiled: bool = False
+    # "admit" entries: prompt positions the admission actually FORWARDED
+    # (chunked KV-conditioned prefill: the unshared tail padded to the
+    # chunk grid; one-shot prefill: the whole prompt) — the tail-only
+    # compute accounting asserted in tests/test_prefill_chunked.py and
+    # recorded under "chunked_prefill" in BENCH_inference.json.
+    forward_tokens: Optional[int] = None
 
 
 def tag_compiled(warm: set, kind: str, sig: Any = None) -> bool:
@@ -71,9 +77,15 @@ def tag_compiled(warm: set, kind: str, sig: Any = None) -> bool:
 class Engine:
     def __init__(self, api: ModelAPI, params: Any, max_len: int,
                  sample_temperature: float = 0.0, seed: int = 0,
-                 layout: Optional[Any] = None):
+                 layout: Optional[Any] = None,
+                 prefill_chunk: Optional[int] = None):
         self.api = api
-        self.decode = build_decode(api.cfg, layout)
+        # prefill_chunk rides on the decode protocol: the Engine's own
+        # uniform-batch prefill is one fixed-shape dispatch already, but
+        # a SlotScheduler built from this engine's decode inherits the
+        # chunked-admission default.
+        self.decode = build_decode(api.cfg, layout,
+                                   prefill_chunk=prefill_chunk)
         self.params = params
         self.max_len = max_len
         self.temperature = sample_temperature

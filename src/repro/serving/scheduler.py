@@ -72,7 +72,8 @@ class SlotScheduler:
     def __init__(self, decode: DecodeAPI, params: Any, slots: int,
                  max_len: int, chunk_size: int = 8, seed: int = 0,
                  prefix_sharing: bool = False,
-                 max_head_skips: Optional[int] = None):
+                 max_head_skips: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         # accept a ModelAPI facade too (duck-typed .decode)
         if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
             decode = decode.decode
@@ -85,6 +86,15 @@ class SlotScheduler:
         self.slots = slots
         self.max_len = max_len
         self.chunk_size = chunk_size
+        # chunked KV-conditioned admission: default rides on the decode
+        # protocol (build_decode(prefill_chunk=...)); None = one-shot
+        # full-prompt prefill (one compile per distinct prompt length)
+        if prefill_chunk is None:
+            prefill_chunk = getattr(decode, "prefill_chunk", None)
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be positive (or None "
+                             "for one-shot admission)")
+        self.prefill_chunk = prefill_chunk
 
         self.state = decode.init_state(slots, max_len)
         self.layout = self.state.layout
@@ -117,6 +127,12 @@ class SlotScheduler:
             self._page_ref = np.zeros((self.layout.pool_pages,), np.int32)
             self._fork = jax.jit(lambda st, src, dst: dataclasses.replace(
                 st, kv=self.layout.fork_pages(st.kv, src, dst)))
+        if self.prefill_chunk is not None and self._paged and \
+                self.prefill_chunk % self.layout.page != 0:
+            raise ValueError(
+                f"prefill_chunk {self.prefill_chunk} must be a multiple "
+                f"of the page size {self.layout.page} — chunk-granular "
+                f"page writes cover whole pages")
 
         self.prefix_sharing = bool(prefix_sharing) and self._paged
         self._prefix_map: Dict[bytes, int] = {}   # chunk-chain key -> page
@@ -292,22 +308,45 @@ class SlotScheduler:
                     host_mask[:n_adopt] = False
                     mask = jnp.asarray(host_mask)
             self._set_table_row(slot, pages)
-        t0 = time.perf_counter()
-        logits, self.state = self._prefill_slot(
-            self.params, self.state, np.int32(slot),
-            jnp.asarray(session.prompt), extras=session.extras,
-            page_write_mask=mask)
-        logits = jax.block_until_ready(logits)
-        self._key_cache.pop(session.sid, None)
-        # the prefill retraces on any shape change: prompt length, mask
-        # presence, AND extras shapes (enc-dec audio / VLM vision inputs)
+        resident = len(plan["adopted"]) * self.layout.page \
+            if self._paged else 0
+        chunked = self.prefill_chunk is not None and \
+            self.decode.supports_chunked_prefill(session.extras) and \
+            self.decode.chunked_prefill_fits(
+                len(session.prompt), resident, self.prefill_chunk,
+                self.max_len)
         extras_sig = tuple(sorted(
             (k, tuple(np.shape(v))) for k, v in (session.extras or {}).items()))
+        t0 = time.perf_counter()
+        if chunked:
+            # KV-conditioned chunked admission: forward compute covers
+            # only the unshared tail (adopted pages are attended, not
+            # recomputed... except the one chunk the logits need), and
+            # every dispatch has a fixed shape — the compile signature
+            # is the BUCKET (chunk size x variants), not the prompt
+            # length, so K distinct lengths share one compiled set.
+            logits, self.state, info = self.decode.prefill_into_slot_chunked(
+                self.params, self.state, np.int32(slot), session.prompt,
+                extras=session.extras, page_write_mask=mask,
+                resident_len=resident, chunk=self.prefill_chunk)
+            fwd = info["forward_tokens"]
+            sig = ("chunked", self.prefill_chunk, resident > 0,
+                   mask is not None, extras_sig)
+        else:
+            logits, self.state = self._prefill_slot(
+                self.params, self.state, np.int32(slot),
+                jnp.asarray(session.prompt), extras=session.extras,
+                page_write_mask=mask)
+            fwd = len(session.prompt)
+            # the one-shot prefill retraces on any shape change: prompt
+            # length, mask presence, AND extras shapes
+            sig = (len(session.prompt), mask is not None, extras_sig)
+        logits = jax.block_until_ready(logits)
+        self._key_cache.pop(session.sid, None)
         self.admit_stats.append(StepStats(
             "admit", time.perf_counter() - t0, tokens=len(session.prompt),
-            compiled=tag_compiled(self._warm, "admit",
-                                  (len(session.prompt), mask is not None,
-                                   extras_sig))))
+            compiled=tag_compiled(self._warm, "admit", sig),
+            forward_tokens=fwd))
         self.key, sub = jax.random.split(self.key)
         t0k = sample_tokens(logits[None],
                             jnp.full((1,), session.temperature), sub)[0]

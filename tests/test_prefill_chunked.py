@@ -1,0 +1,436 @@
+"""Chunked, KV-conditioned prefill + bucketed compile shapes (PR 5).
+
+Four concerns:
+
+1. **Stream parity** — chunked admission must be token-identical to the
+   one-shot ``prefill_into_slot`` admission for every cache layout x
+   model family in the matrix (int8 layouts quantize the SAME values on
+   write, so even they stay exact here).
+2. **Tail-only compute** — with prefix sharing, a session whose prompt
+   shares a resident page-aligned prefix must FORWARD only its unshared
+   tail (padded to the chunk grid): asserted on the scheduler's
+   ``admit_stats.forward_tokens``.  The tconst family is exempt by
+   design (the paper's resync rebuilds the compressed ctx KV from the
+   full history) — its chunked admission is the BUCKETED fixed-shape
+   prefill.
+3. **Bucketing** — K distinct prompt lengths must produce at most
+   bucket-count (chunk-shape x variant) compile-tagged admissions,
+   instead of one per length.
+4. **Layout primitives** — ``DecodeState.read_slot`` (seeding the row
+   cache from resident pages) and ``write_span`` (chunk-granular page
+   writes, adopted pages redirected to TRASH via ``min_page``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.models import layouts as LT
+from repro.models.api import build_decode, build_model
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+
+PAGE = 16
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = reduced(get_config("smollm_360m"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tlin_setup():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                  attention_mode="tlin")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tconst_setup():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def encdec_setup():
+    cfg = reduced(get_config("whisper_small"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+def _spec(kind):
+    if kind == "dense":
+        return None
+    return LT.LayoutSpec(kind=kind, page_size=PAGE, pool_pages=24)
+
+
+def _extras(cfg):
+    if not cfg.is_encdec:
+        return None
+    rng = np.random.RandomState(9)
+    return {"audio_feats": rng.randn(
+        cfg.encoder_seq, cfg.frontend_dim).astype(np.float32)}
+
+
+def _serve(cfg, params, prompts, spec, prefill_chunk, gen=6,
+           stagger=True, slots=2, **kw):
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=slots,
+                          max_len=128, chunk_size=4,
+                          prefill_chunk=prefill_chunk, **kw)
+    sessions = []
+    for p in prompts:
+        sessions.append(sched.submit(Session(
+            p, max_new_tokens=gen, extras=_extras(cfg))))
+        if stagger:
+            sched.step()       # staggered admission: mixed resync phases
+    sched.run()
+    return [s.tokens for s in sessions], sched
+
+
+# ---------------------------------------------------------------------------
+# 1. stream parity: chunked == one-shot admission, layouts x families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "paged_int8"])
+@pytest.mark.parametrize("family", ["tconst", "tlin", "lm", "encdec"])
+def test_chunked_admission_token_identical(family, kind, request):
+    """Chunked admission streams match one-shot admission exactly for
+    every layout x family, under staggered continuous batching."""
+    cfg, api, params = request.getfixturevalue(f"{family}_setup")
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (21, 34, 17)]
+    ref, _ = _serve(cfg, params, prompts, _spec(kind), None)
+    out, sched = _serve(cfg, params, prompts, _spec(kind), CHUNK)
+    assert out == ref, f"chunked admission changed the {family}/{kind} " \
+                       f"streams"
+    assert all(s.forward_tokens is not None for s in sched.admit_stats)
+
+
+# ---------------------------------------------------------------------------
+# 2. tail-only compute for shared prefixes
+# ---------------------------------------------------------------------------
+
+
+def _shared_prompts(cfg, n, common_len=48, tail_len=8, seed=0):
+    rng = np.random.RandomState(seed)
+    common = rng.randint(1, cfg.vocab_size,
+                         size=common_len).astype(np.int32)
+    return [np.concatenate([common, rng.randint(
+        1, cfg.vocab_size, size=tail_len).astype(np.int32)])
+        for _ in range(n)]
+
+
+@pytest.mark.parametrize("kind", ["paged", "paged_int8"])
+def test_shared_prefix_admission_forwards_only_the_tail(lm_setup, kind):
+    """A prompt whose page-aligned prefix is resident (adopted from the
+    prefix map) runs forward compute over <= tail + one chunk of tokens;
+    the cold admission pays the whole prompt.  Streams stay identical to
+    the unchunked sharing run AND to the solo run."""
+    cfg, api, params = lm_setup
+    prompts = _shared_prompts(cfg, 3)          # 48 shared + 8 tail
+    spec = _spec(kind)
+    # 3 slots: all sessions admit while the prefix is resident (with 2,
+    # the third would only admit after both sharers retired — refcount 0
+    # recycles the pages and the admission goes cold)
+    ref, _ = _serve(cfg, params, prompts, spec, None, stagger=False,
+                    slots=3, prefix_sharing=True)
+    out, sched = _serve(cfg, params, prompts, spec, CHUNK, stagger=False,
+                        slots=3, prefix_sharing=True)
+    assert out == ref
+    fwd = [s.forward_tokens for s in sched.admit_stats]
+    tail = len(prompts[0]) - 48
+    # first admission is cold: full prompt padded to the chunk grid
+    assert fwd[0] >= len(prompts[0])
+    # later admissions adopt the 3 resident prefix pages: forward compute
+    # covers at most the tail plus one chunk of padding
+    assert all(f <= tail + CHUNK for f in fwd[1:]), fwd
+    assert all(f < fwd[0] for f in fwd[1:]), fwd
+    # solo reference through the same layout
+    solo, _ = _serve(cfg, params, prompts[:1], spec, CHUNK, stagger=False)
+    assert out[0] == solo[0]
+
+
+def test_fully_resident_prompt_still_yields_admission_logits(lm_setup):
+    """When the adopted prefix covers the WHOLE page-aligned prompt, the
+    driver still forwards the final chunk (for the first sampled token)
+    but redirects its page writes to TRASH — the adopted pages are never
+    written and the stream stays exact."""
+    cfg, api, params = lm_setup
+    rng = np.random.RandomState(4)
+    p = rng.randint(1, cfg.vocab_size, size=3 * PAGE).astype(np.int32)
+    spec = _spec("paged")
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=2,
+                          max_len=128, chunk_size=4, prefix_sharing=True,
+                          prefill_chunk=CHUNK)
+    s1 = sched.submit(Session(p.copy(), max_new_tokens=6))
+    s2 = sched.submit(Session(p.copy(), max_new_tokens=6))
+    sched.admit_pending()
+    refs = sched.page_refcounts()
+    assert int((refs > 1).sum()) == 3          # all 3 prompt pages shared
+    shared_pages = np.nonzero(refs > 1)[0]
+
+    def snapshot():
+        return {f: np.take(np.asarray(a), shared_pages,
+                           axis=sched.layout._length_axis(f) - 1).copy()
+                for f, a in sched.state.kv.items()
+                if sched.layout._length_axis(f) is not None}
+
+    before = snapshot()
+    sched.run()
+    solo, _ = _serve(cfg, params, [p], spec, CHUNK, stagger=False)
+    assert s1.tokens == solo[0] and s2.tokens == solo[0]
+    # the recomputed chunk never wrote the shared pages
+    after = snapshot()
+    for f in before:
+        np.testing.assert_array_equal(
+            after[f], before[f],
+            err_msg=f"fully-resident admission wrote shared {f}")
+
+
+# ---------------------------------------------------------------------------
+# 3. bucketing: K distinct prompt lengths, <= bucket-count compiles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["tconst", "lm", "encdec"])
+def test_bucketing_bounds_compiled_admissions(family, request):
+    """With chunked admission the compile signature is the bucket (chunk
+    shape x variants), not the prompt length: K distinct lengths tag at
+    most ONE cold-admission compile, where the one-shot path tags K."""
+    cfg, api, params = request.getfixturevalue(f"{family}_setup")
+    lengths = (17, 26, 35, 44)
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lengths]
+
+    def tagged(prefill_chunk):
+        sched = SlotScheduler(build_decode(cfg), params, slots=1,
+                              max_len=128, chunk_size=4,
+                              prefill_chunk=prefill_chunk)
+        for p in prompts:
+            sched.submit(Session(p, max_new_tokens=1,
+                                 extras=_extras(cfg)))
+            sched.admit_pending()
+        assert len(sched.admit_stats) == len(lengths)
+        return sum(1 for s in sched.admit_stats if s.compiled)
+
+    assert tagged(CHUNK) == 1          # one bucket: cold chunked variant
+    assert tagged(None) == len(lengths)   # one-shot: one per length
+
+
+def test_prefill_chunk_must_align_to_page_grid(lm_setup):
+    cfg, api, params = lm_setup
+    with pytest.raises(ValueError, match="multiple of the page size"):
+        SlotScheduler(build_decode(cfg, _spec("paged")), params, slots=1,
+                      max_len=128, prefill_chunk=PAGE + 1)
+    with pytest.raises(ValueError, match="must be positive"):
+        SlotScheduler(build_decode(cfg), params, slots=1, max_len=128,
+                      prefill_chunk=0)
+
+
+def test_build_decode_carries_prefill_chunk_default(lm_setup):
+    """The knob rides the decode protocol: build_decode(prefill_chunk=N)
+    is the scheduler's default chunk size."""
+    cfg, api, params = lm_setup
+    dec = build_decode(cfg, None, prefill_chunk=CHUNK)
+    sched = SlotScheduler(dec, params, slots=1, max_len=128)
+    assert sched.prefill_chunk == CHUNK
+    sched.submit(Session(np.arange(1, 20, dtype=np.int32),
+                         max_new_tokens=1))
+    sched.admit_pending()
+    assert sched.admit_stats[0].forward_tokens == 2 * CHUNK  # 19 -> 32
+
+
+# ---------------------------------------------------------------------------
+# 4. layout primitives: read_slot / write_span
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "int8", "paged_int8"])
+def test_read_slot_matches_merged_oracle(lm_setup, kind):
+    """read_slot must equal the merged() oracle's row for every layout
+    (int8: both sides dequantize the same stored values)."""
+    cfg, api, params = lm_setup
+    dec = build_decode(cfg, _spec(kind) if kind != "int8"
+                       else LT.LayoutSpec(kind="int8"))
+    sched = SlotScheduler(dec, params, slots=2, max_len=64, chunk_size=4)
+    sched.submit(Session(np.arange(1, 22, dtype=np.int32),
+                         max_new_tokens=2))
+    sched.step()
+    state = sched.state
+    row = jax.jit(state.read_slot)(np.int32(0))
+    oracle = state.merged()
+    for f, v in row.items():
+        ref = jax.lax.dynamic_slice_in_dim(oracle[f], 0, 1,
+                                           state.axes[f])
+        np.testing.assert_allclose(np.asarray(v), np.asarray(ref),
+                                   rtol=0, atol=0,
+                                   err_msg=f"read_slot({f}) != oracle")
+
+
+@pytest.mark.parametrize("kind", ["paged", "paged_int8"])
+def test_write_span_chunk_granular_page_writes(lm_setup, kind):
+    """write_span writes exactly the pages covering [start, start+C) of
+    the slot's table — other slots' pages and entries below min_page
+    (adopted) are untouched."""
+    cfg, api, params = lm_setup
+    dec = build_decode(cfg, _spec(kind))
+    state = dec.init_state(2, 64)                    # 4 pages per slot
+    pt = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    state = state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
+    rng = np.random.RandomState(0)
+    C = 2 * PAGE                                     # span = 2 whole pages
+    chunk = {}
+    for f in ("k", "v"):
+        sh = state.dense_shapes()[f].shape           # (layers,2,64,KV,hd)
+        chunk[f] = 0.1 * jnp.asarray(rng.randn(
+            sh[0], 1, C, sh[3], sh[4]).astype(np.float32))
+    before = {f: np.asarray(v).copy() for f, v in state.kv.items()}
+    out = jax.jit(lambda st, s: st.write_span(
+        s, chunk, {"k": 2, "v": 2}, jnp.int32(0),
+        min_page=jnp.int32(1)))(state, np.int32(0))
+    merged = out.merged()
+    for f in ("k", "v"):
+        got = np.asarray(merged[f][:, 0])            # slot 0 row
+        want = np.asarray(chunk[f][:, 0])
+        tol = 0.0
+        if kind == "paged_int8":
+            q, s = LT.quantize_int8(chunk[f])
+            want = np.asarray(LT.dequantize_int8(q, s, jnp.float32)[:, 0])
+            tol = 1e-6          # jit-fused quantize: scale within 1 ULP
+        # page 1 of the span is written...
+        np.testing.assert_allclose(got[:, PAGE:C], want[:, PAGE:C],
+                                   rtol=0, atol=tol)
+        # ...page 0 (below min_page = "adopted") is redirected to TRASH
+        np.testing.assert_array_equal(got[:, :PAGE],
+                                      np.zeros_like(got[:, :PAGE]))
+    # the OTHER slot's pool pages are bit-identical
+    for pf, arr in out.kv.items():
+        la = out.layout._length_axis(pf)
+        if la is None:
+            continue
+        np.testing.assert_array_equal(
+            np.take(np.asarray(arr), range(4, 8), axis=la - 1),
+            np.take(before[pf], range(4, 8), axis=la - 1),
+            err_msg=f"write_span leaked into slot 1 pages of {pf}")
+
+
+def test_write_span_dense_and_int8_positional(lm_setup):
+    """Non-paged layouts write the span positionally at (slot, start)."""
+    cfg, api, params = lm_setup
+    for kind in ("dense", "int8"):
+        dec = build_decode(cfg, LT.LayoutSpec(kind=kind))
+        state = dec.init_state(2, 64)
+        rng = np.random.RandomState(1)
+        sh = state.dense_shapes()["k"].shape
+        chunk = {"k": jnp.asarray(rng.randn(
+            sh[0], 1, CHUNK, *sh[3:]).astype(np.float32)) * 0.1}
+        out = state.write_span(np.int32(1), chunk, {"k": 2},
+                               jnp.int32(8))
+        got = np.asarray(out.merged()["k"][:, 1])
+        want = np.asarray(chunk["k"][:, 0])
+        tol = 0.0 if kind == "dense" else 2e-3      # int8 quantize-on-write
+        np.testing.assert_allclose(got[:, 8:8 + CHUNK], want[:, :CHUNK],
+                                   rtol=0, atol=tol)
+        # slot 0 untouched
+        np.testing.assert_array_equal(
+            np.asarray(out.merged()["k"][:, 0]),
+            np.asarray(state.merged()["k"][:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# recurrent-state families: padding must not advance the ssm/conv state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mamba2_130m", "hymba_1_5b"])
+def test_chunked_admission_recurrent_state_families(arch):
+    """The last chunk's zero padding must not advance the ssm/conv
+    recurrent state (dt is masked, the conv window ends at the true
+    length) — streams match the one-shot admission exactly."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (19, 33)]
+    ref, _ = _serve(cfg, params, prompts, None, None, gen=5)
+    out, _ = _serve(cfg, params, prompts, None, CHUNK, gen=5)
+    assert out == ref
+
+
+def test_chunk_grid_overflow_falls_back_to_one_shot(lm_setup):
+    """A prompt whose chunk-grid padding would spill past max_len (where
+    dynamic_update_slice would CLAMP onto real positions) must fall back
+    to one-shot admission transparently."""
+    cfg, api, params = lm_setup
+    rng = np.random.RandomState(6)
+    p = rng.randint(1, cfg.vocab_size, size=65).astype(np.int32)
+
+    def serve(pc):
+        sched = SlotScheduler(build_decode(cfg), params, slots=1,
+                              max_len=74, chunk_size=4, prefill_chunk=pc)
+        s = sched.submit(Session(p, max_new_tokens=5))
+        sched.run()
+        return s.tokens, sched
+
+    out, sched = serve(CHUNK)          # grid 5*16 = 80 > 74: fallback
+    assert sched.admit_stats[0].forward_tokens == 65   # one-shot, unpadded
+    ref, _ = serve(None)
+    assert out == ref
+
+
+def test_hybrid_sharing_forwards_full_prompt_for_recurrent_state():
+    """The ssm/conv recurrent state is a function of the FULL prompt and
+    cannot be reconstructed from adopted KV pages — a recurrent-state
+    family's sharing admission must forward from position 0 (adopted
+    pages still save the writes), and its stream must stay exact."""
+    cfg = reduced(get_config("hymba_1_5b"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = _shared_prompts(cfg, 2, common_len=32, seed=7)   # 40 tokens
+    spec = _spec("paged")
+    sched = SlotScheduler(build_decode(cfg, spec), params, slots=2,
+                          max_len=128, chunk_size=4, prefix_sharing=True,
+                          prefill_chunk=CHUNK)
+    ss = [sched.submit(Session(p, max_new_tokens=6)) for p in prompts]
+    sched.admit_pending()
+    assert (sched.page_refcounts() > 1).sum() == 2    # pages ARE adopted
+    fwd = [s.forward_tokens for s in sched.admit_stats]
+    assert fwd[1] >= len(prompts[1])   # full forward, not tail-only
+    sched.run()
+    for s, p in zip(ss, prompts):
+        solo, _ = _serve(cfg, params, [p], spec, CHUNK, stagger=False)
+        assert s.tokens == solo[0], "sharing corrupted the ssm state"
+
+
+def test_vlm_admission_falls_back_to_one_shot():
+    """Vision sessions keep the one-shot path (prompt-length-shaped
+    vision mask): the scheduler must route them transparently."""
+    cfg = reduced(get_config("qwen2_vl_2b"), dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    Tv = cfg.frontend_tokens
+    mask = np.zeros((24,), bool)
+    mask[:Tv] = True
+    extras = {"vision_embeds": np.zeros((Tv, cfg.frontend_dim),
+                                        np.float32),
+              "vision_mask": mask}
+    sched = SlotScheduler(build_decode(cfg), params, slots=1, max_len=80,
+                          chunk_size=4, prefill_chunk=CHUNK)
+    s = sched.submit(Session(np.arange(1, 25, dtype=np.int32),
+                             max_new_tokens=5, extras=extras))
+    sched.run()
+    assert s.done and len(s.tokens) == 5
+    # one-shot fallback forwards the whole prompt, unpadded
+    assert sched.admit_stats[0].forward_tokens == 24

@@ -1,0 +1,166 @@
+"""Docs smoke-checker: every command the docs quote must run green, and
+every intra-repo link must resolve.
+
+Scans README.md and docs/*.md for fenced ```bash blocks and executes
+each line that launches something (``PYTHONPATH=src python ...`` /
+``python -m ...``), from the repo root, failing on a non-zero exit.  A
+block may be excluded by putting an HTML comment directive with a reason
+on the line directly above the fence::
+
+    <!-- docs-check: skip — the tier-1 suite runs in its own CI job -->
+    ```bash
+    PYTHONPATH=src python -m pytest -q -m "not slow"
+    ```
+
+``pip install`` lines are treated as environment setup and skipped (CI
+installs the package itself).  Link checking covers every markdown
+``[text](target)`` whose target is not an absolute URL or a pure
+anchor: the referenced path must exist relative to the file.
+
+Usage::
+
+    python tools/check_docs.py [--list]          # --list: print, don't run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SKIP_RE = re.compile(r"<!--\s*docs-check:\s*skip\b(.*?)-->")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CMD_TIMEOUT = int(os.environ.get("DOCS_CMD_TIMEOUT", "1200"))
+
+
+def doc_files() -> list:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def extract_commands(path: Path):
+    """Yield (lineno, command, skip_reason|None) for each runnable
+    command quoted in ``path`` (line-continuations joined)."""
+    lines = path.read_text().splitlines()
+    in_bash = False
+    skip: "str | None" = None
+    pending_skip: "str | None" = None
+    buf, buf_line = "", 0
+    for i, line in enumerate(lines, 1):
+        fence = FENCE_RE.match(line.strip())
+        if fence and not in_bash:
+            if fence.group(1) in ("bash", "sh", "console"):
+                in_bash, skip = True, pending_skip
+            pending_skip = None
+            continue
+        if fence and in_bash:
+            if buf:      # trailing backslash ran into the closing fence:
+                yield buf_line, buf, skip   # run it visibly, never drop it
+                buf = ""
+            in_bash = False
+            continue
+        m = SKIP_RE.search(line)
+        if m:
+            reason = m.group(1).strip()
+            if not reason:
+                raise SystemExit(f"{path}:{i}: docs-check: skip needs a "
+                                 f"stated reason")
+            pending_skip = reason
+            continue
+        if not in_bash:
+            if line.strip():        # directive must sit right above the fence
+                pending_skip = None
+            continue
+        stripped = line.strip()
+        if not stripped or stripped.startswith("#"):
+            continue
+        if buf:
+            joined = buf + " " + stripped.rstrip("\\").strip()
+        else:
+            joined = stripped.rstrip("\\").strip()
+            buf_line = i
+        if stripped.endswith("\\"):
+            buf = joined
+            continue
+        buf = ""
+        if joined.startswith("pip "):
+            continue                    # environment setup: CI's job
+        yield buf_line, joined, skip
+
+
+def check_links(path: Path) -> list:
+    errors = []
+    text = path.read_text()
+    # strip fenced code (links inside code blocks are not navigation)
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the commands without running them")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for doc in doc_files():
+        failures.extend(check_links(doc))
+
+    n_run = n_skip = 0
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for doc in doc_files():
+        for lineno, cmd, skip in extract_commands(doc):
+            where = f"{doc.relative_to(ROOT)}:{lineno}"
+            if skip:
+                n_skip += 1
+                print(f"[docs-check] SKIP {where}: {cmd}\n"
+                      f"             reason: {skip}")
+                continue
+            n_run += 1
+            if args.list:
+                print(f"[docs-check] LIST {where}: {cmd}")
+                continue
+            print(f"[docs-check] RUN  {where}: {cmd}", flush=True)
+            t0 = time.time()
+            try:
+                proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env,
+                                      capture_output=True, text=True,
+                                      timeout=CMD_TIMEOUT)
+            except subprocess.TimeoutExpired:
+                # a hung demo must fail THIS command and keep checking
+                # the rest, not abort the whole run with a traceback
+                failures.append(f"{where}: timed out after "
+                                f"{CMD_TIMEOUT}s: {cmd}")
+                continue
+            dt = time.time() - t0
+            if proc.returncode != 0:
+                failures.append(f"{where}: exit {proc.returncode}: {cmd}")
+                print(proc.stdout[-4000:])
+                print(proc.stderr[-4000:], file=sys.stderr)
+            else:
+                print(f"[docs-check]      ok ({dt:.1f}s)")
+    print(f"[docs-check] {n_run} command(s) "
+          f"{'listed' if args.list else 'ran'}, {n_skip} skipped, "
+          f"{len(failures)} failure(s)")
+    for f in failures:
+        print(f"[docs-check] FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
