@@ -14,10 +14,13 @@ Validates the paper's qualitative claims at reduced scale:
 
 Besides the CSV rows, the run writes ``BENCH_inference.json`` (cwd) with
 tokens/s, cache bytes per layout, the compacted resync-miss cost, the
-prefix-sharing byte accounting, and the chunked-admission scenario
+prefix-sharing byte accounting, the chunked-admission scenario
 (forward tokens / est. prefill FLOPs + warm latency vs unshared-tail
 length, shared vs cold vs one-shot, plus the prompt-length-bucketing
-compile counts), so the perf trajectory is tracked across PRs.
+compile counts), and the session-tiering scenario (oversubscribed
+spill/resume latency + host-tier bytes per layout, and the tconst
+admission-cache hit vs cold admission), so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
@@ -254,6 +257,105 @@ def _chunked_prefill_scenario(emit) -> Dict:
             "rows": rows}
 
 
+def _spill_resume_scenario(api, params, emit) -> Dict:
+    """Session tiering (PR 6): oversubscribed serving (4 sessions on 2
+    slots, preemptive spill every chunk) per layout — warm RESUME
+    latency (one jitted scatter from the host tier) vs the warm COLD
+    admission it replaces, the host-tier bytes one spilled session
+    costs in each PHYSICAL layout (paged: live pages only; int8: stays
+    compressed), and the store occupancy after the run."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+    from repro.serving.tier_store import TierStore
+
+    gen, L = 8, 24
+    rng = np.random.RandomState(13)
+    # equal lengths: the one-shot prefill compiles once, so 3 of the 4
+    # cold admissions (and all but the first resume) report warm
+    prompts = [rng.randint(1, api.cfg.vocab_size, size=L).astype(np.int32)
+               for _ in range(4)]
+    out: Dict[str, Dict] = {}
+    for kind in ("dense", "paged", "int8", "paged_int8"):
+        spec = None if kind == "dense" else LayoutSpec(
+            kind=kind, page_size=16, pool_pages=32)
+        store = TierStore()
+        sched = SlotScheduler(build_decode(api.cfg, spec), params,
+                              slots=2, max_len=128, chunk_size=4,
+                              tier_store=store, preempt_chunks=1)
+        for p in prompts:
+            sched.submit(Session(p, max_new_tokens=gen))
+        sched.run()
+        cold = [s.seconds for s in sched.admit_stats
+                if s.source == "cold" and not s.compiled]
+        resume = [s.seconds for s in sched.admit_stats
+                  if s.source == "resume" and not s.compiled]
+        sp = sched.spill_stats
+        row = {
+            "cold_admit_warm_ms": 1e3 * float(np.median(cold)) if cold
+                                  else float("nan"),
+            "resume_warm_ms": 1e3 * float(np.median(resume)) if resume
+                              else float("nan"),
+            "spills": sp["spills"],
+            "resumes": sp["resumes"],
+            "host_bytes_per_spilled_session":
+                sp["spilled_bytes"] / max(sp["spills"], 1),
+            "store_occupancy_bytes": store.occupancy_bytes,
+            "store_entries": len(store),
+        }
+        out[kind] = row
+        emit(f"spill_resume/{kind}/resume_warm_ms", row["resume_warm_ms"],
+             f"cold admission {row['cold_admit_warm_ms']:.2f}ms")
+        emit(f"spill_resume/{kind}/host_bytes_per_spilled_session",
+             row["host_bytes_per_spilled_session"],
+             f"{sp['spills']} spills; store holds "
+             f"{row['store_occupancy_bytes']} bytes")
+    return {"sessions": 4, "slots": 2, "gen": gen, "prompt_len": L,
+            "layouts": out}
+
+
+def _admission_cache_scenario(api, params, emit) -> Dict:
+    """The O(1) tconst re-admission: a prompt whose admission snapshot
+    is resident in the tier store restores in one scatter (zero forward
+    tokens) instead of re-running the O(N) prefill/resync — warm hit vs
+    warm cold latency on the paper's own family."""
+    from repro.models.api import build_decode
+    from repro.serving.scheduler import SlotScheduler
+    from repro.serving.session import Session
+    from repro.serving.tier_store import TierStore
+
+    L = 32
+    rng = np.random.RandomState(17)
+    store = TierStore()
+
+    def admit(prompt):
+        sched = SlotScheduler(build_decode(api.cfg), params, slots=1,
+                              max_len=128, chunk_size=4, tier_store=store)
+        sched.submit(Session(prompt.copy(), max_new_tokens=1))
+        sched.admit_pending()
+        return sched.admit_stats[-1]
+
+    warmup = rng.randint(1, api.cfg.vocab_size, size=L).astype(np.int32)
+    prompt = rng.randint(1, api.cfg.vocab_size, size=L).astype(np.int32)
+    admit(warmup)                     # compile the cold prefill
+    cold = admit(prompt)              # warm cold: writes the snapshot
+    admit(prompt)                     # compile the restore
+    hit = admit(prompt)               # warm store hit
+    assert hit.source == "store" and hit.forward_tokens == 0
+    row = {
+        "prompt_len": L,
+        "cold_admit_warm_ms": 1e3 * cold.seconds,
+        "store_hit_warm_ms": 1e3 * hit.seconds,
+        "cold_forward_tokens": cold.forward_tokens,
+        "hit_forward_tokens": hit.forward_tokens,
+    }
+    emit("spill_resume/tconst_admission_cache/store_hit_warm_ms",
+         row["store_hit_warm_ms"],
+         f"cold {row['cold_admit_warm_ms']:.2f}ms forwarding "
+         f"{cold.forward_tokens} tokens; hit forwards 0")
+    return row
+
+
 def _bucketed_admission_scenario(api, params, emit) -> Dict:
     """Prompt-length bucketing: K distinct prompt lengths should produce
     at most bucket-count compile-tagged admissions under the chunked
@@ -296,6 +398,7 @@ def run(emit) -> None:
     layouts: Dict[str, Dict] = {}
     prefix_sharing: Dict[str, Dict] = {}
     bucketed: Dict[str, Dict] = {}
+    spill_resume: Dict[str, Dict] = {}
     for name, cfg in variants.items():
         api = build_model(cfg)
         params = api.init(jax.random.PRNGKey(0))
@@ -320,12 +423,17 @@ def run(emit) -> None:
             prefix_sharing = {
                 kind: _shared_prefix_scenario(api, params, kind, emit)
                 for kind in ("paged", "paged_int8")}
+            # session tiering on the family whose KV actually pages:
+            # spill/resume latency + host-tier bytes per layout
+            spill_resume = _spill_resume_scenario(api, params, emit)
         if name == "tconst":
             # bucketing headline for the paper's own family: admission
             # collapses to ONE fixed-shape dispatch (resync is already
             # max_len-shaped; the window pass pads to W_og)
             bucketed[name] = _bucketed_admission_scenario(api, params,
                                                           emit)
+            spill_resume["tconst_admission_cache"] = \
+                _admission_cache_scenario(api, params, emit)
     chunked_prefill = _chunked_prefill_scenario(emit)
     chunked_prefill["bucketed_admissions"] = bucketed
 
@@ -361,6 +469,10 @@ def run(emit) -> None:
         # and warm latency vs unshared-tail length (shared vs cold vs
         # one-shot), plus the prompt-length-bucketing compile counts
         "chunked_prefill": chunked_prefill,
+        # session tiering: oversubscribed spill/resume latency + host-
+        # tier bytes per layout, and the tconst admission-cache hit
+        # (O(1) re-admission: zero forward tokens) vs cold admission
+        "spill_resume": spill_resume,
         "derived": {
             "tconst_hit_flatness": flat,
             "tconst_cache_O1_ratio": cache_ratio,

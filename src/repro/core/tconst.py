@@ -36,10 +36,12 @@ the paper's Fig 1a baseline.
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.layers import attention as A
@@ -445,6 +447,25 @@ def pending_resync_rows(cache: Dict[str, Any], cfg: ModelConfig
 # a row-wise resync only ever needs to GATHER these bookkeeping fields —
 # never the KV cache itself.
 RESYNC_INPUT_KEYS = ("tokens", "hist_len", "gen_len")
+
+
+def admission_digest(tokens, mode: str, w_og: int) -> bytes:
+    """Content key of a TConst POST-ADMISSION slot state.
+
+    ``resync`` (and therefore the bucketed admission prefill) rebuilds
+    the ctx/hist KV purely from ``RESYNC_INPUT_KEYS`` — the raw token
+    ids plus the deterministic hist/gen split, itself a function of the
+    prompt length and ``w_og`` — so for fixed params/config the admitted
+    slot (KV *and* bookkeeping) is a pure function of the prompt ids.
+    That purity is what makes the ctx/hist KV content-addressable: two
+    admissions of the same prompt may share one stored snapshot, and a
+    tier-store hit replaces the O(N) resync with an O(1) restore.  The
+    digest is salted with ``mode`` (tconst vs tlin caches differ) and
+    ``w_og`` (it fixes the split); the caller layers scheduler-level
+    salt (layout, max_len) on top."""
+    h = hashlib.sha1(f"tconst-admit\x00{mode}\x00{w_og}\x00".encode())
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
 
 
 def resync_buckets(batch: int) -> Tuple[int, ...]:

@@ -49,6 +49,14 @@ Chunked tail-only admission on top (bucketed prefill compiles)::
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \\
       --sessions 4 --slots 4 --gen 16 --prompt-len 64 \\
       --layout paged --page-size 16 --prefix-sharing --prefill-chunk 16
+
+Session tiering (oversubscribed: sessions >> slots, idle sessions spill
+to a host-RAM tier store and resume token-identically; prints spill /
+resume cycles and assigned-vs-spilled bytes)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
+      --sessions 6 --slots 2 --gen 16 --layout paged --page-size 16 \\
+      --spill-capacity-mb 64
 """
 from __future__ import annotations
 
@@ -65,6 +73,7 @@ from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
+from repro.serving.tier_store import TierStore
 
 
 def _layout_spec(args) -> LayoutSpec:
@@ -109,6 +118,22 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             ap.error(f"--prefill-chunk {args.prefill_chunk} must be a "
                      f"multiple of --page-size {args.page_size} — "
                      f"chunk-granular page writes cover whole pages")
+    if args.spill_capacity_mb < 0:
+        ap.error(f"--spill-capacity-mb {args.spill_capacity_mb} must be "
+                 f"positive (0 disables session tiering)")
+    if (args.spill_capacity_mb or args.spill_dir) and not args.sessions:
+        ap.error("--spill-capacity-mb/--spill-dir tier per-SESSION slot "
+                 "state; the uniform batch has no sessions to spill — "
+                 "add --sessions N")
+    if args.spill_dir and not args.spill_capacity_mb:
+        ap.error("--spill-dir is the tier BELOW a bounded host-RAM store: "
+                 "demotions to disk only happen when --spill-capacity-mb "
+                 "caps the RAM tier, so without it the directory would "
+                 "stay empty forever.  Size the cap in the layout's "
+                 "PHYSICAL bytes — paged layouts spill only each "
+                 "session's live pages and int8 snapshots stay "
+                 "compressed, so one spilled session costs far less than "
+                 "a dense max_len slot")
     if args.layout not in ("paged", "paged_int8"):
         return
     if cfg.attention_mode == "tconst" and cfg.arch_type not in \
@@ -168,13 +193,20 @@ def run_sessions(cfg, api, params, args) -> int:
         prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
                    for n in lens]
 
+    store = None
+    if args.spill_capacity_mb:
+        store = TierStore(
+            capacity_bytes=int(args.spill_capacity_mb * (1 << 20)),
+            spill_dir=args.spill_dir or None)
     decode = build_decode(cfg, _layout_spec(args),
                           prefill_chunk=args.prefill_chunk or None)
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
                           chunk_size=args.chunk, seed=args.seed,
-                          prefix_sharing=args.prefix_sharing)
+                          prefix_sharing=args.prefix_sharing,
+                          tier_store=store,
+                          preempt_chunks=1 if store is not None else None)
 
     def stream(sess, tok):
         print(f"[serve]   session {sess.sid}: token[{len(sess.tokens) - 1}]"
@@ -191,8 +223,11 @@ def run_sessions(cfg, api, params, args) -> int:
         # staggered admission: run one chunk between submissions so slots
         # sit at different W_og resync phases.  Prefix sharing admits
         # everything up front instead — sessions in flight together keep
-        # the shared prefix resident and refcounted.
-        if not args.prefix_sharing:
+        # the shared prefix resident and refcounted.  Tiering also
+        # submits up front: staggering drains the queue one session per
+        # chunk, so the oversubscription the spill path exists for
+        # would never build up.
+        if not args.prefix_sharing and store is None:
             sched.step()
     if args.prefix_sharing:
         sched.admit_pending()
@@ -238,6 +273,28 @@ def run_sessions(cfg, api, params, args) -> int:
           f"{sched.layout.name} layout): {sched.kv_bytes()}")
 
     ok = True
+    if store is not None:
+        sp = sched.spill_stats
+        print(f"[serve] tiering: {sp['spills']} spills / {sp['resumes']} "
+              f"resumes ({sp['spilled_bytes']} snapshot bytes through the "
+              f"host tier); admission cache {sp['admit_store_hits']} hits "
+              f"/ {sp['admit_store_puts']} puts; {sp['pages_retired']} "
+              f"prefix pages retired / {sp['pages_readopted']} re-adopted")
+        for s in sessions:
+            print(f"[serve]   session {s.sid}: {s.spills} spills, "
+                  f"{s.resumes} resumes")
+        print(f"[serve] tiering: assigned device KV bytes "
+              f"{sched.assigned_kv_bytes()} vs host tier: "
+              f"{store.occupancy_bytes} RAM + {store.disk_bytes} disk "
+              f"({len(store)} blobs; {store.stats})")
+        if args.sessions > args.slots:
+            need = args.sessions - args.slots
+            cycles = sum(1 for s in sessions if s.resumes >= 1)
+            cyc_ok = cycles >= need
+            ok = ok and cyc_ok
+            print(f"[serve] tiering: {cycles} session(s) completed >= 1 "
+                  f"spill->resume cycle (oversubscribed by {need}): "
+                  f"{'ok' if cyc_ok else 'FAIL'}")
     if args.temperature <= 0.0 and args.eos < 0:
         if args.layout in ("int8", "paged_int8"):
             print("[serve]   (int8 layouts: tokens may differ from the "
@@ -301,6 +358,18 @@ def main(argv=None) -> int:
                     help="decode tokens per dispatch (sessions mode)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every streamed token (sessions mode)")
+    ap.add_argument("--spill-capacity-mb", type=float, default=0.0,
+                    help="session tiering (sessions mode): host-RAM tier "
+                         "store capacity in MiB for spilled slot "
+                         "snapshots, retired prefix pages and admission "
+                         "snapshots; oversubscribed sessions preempt-"
+                         "spill at chunk boundaries and resume token-"
+                         "identically; 0 disables tiering")
+    ap.add_argument("--spill-dir", default="",
+                    help="disk tier below the RAM store: entries evicted "
+                         "from --spill-capacity-mb demote to this "
+                         "directory (mmap'd .npy, durable across runs) "
+                         "instead of being dropped")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -296,6 +296,43 @@ class DecodeState:
                                     self.bookkeeping, self.axes)
         return DecodeState(kv, bk, self.axes, self.layout)
 
+    # -- slot snapshot / restore (session tiering) --------------------------
+    def snapshot_slot(self, slot: jax.Array) -> Dict[str, Dict[str, Any]]:
+        """Everything slot ``slot`` owns, in the PHYSICAL representation:
+        ``{"bookkeeping": <non-layout rows, batch dim 1>, "kv": <layout
+        snapshot>}``.  Dense/int8 kv snapshots are batch-axis row slices
+        (int8 stays ``__q``/``__scale`` — compressed on host); paged kv
+        snapshots gather exactly the slot's page-table row out of the
+        pools.  Layout-owned bookkeeping (the page table itself) is NOT
+        captured — a restore binds the snapshot to the destination
+        slot's own fresh pages.  Jittable; the scheduler's spill path
+        jits it once and ``device_get``s the result."""
+        bk = {name: jax.lax.dynamic_slice_in_dim(leaf, slot, 1,
+                                                 self.axes[name])
+              for name, leaf in self.bookkeeping.items()
+              if not name.startswith(LT.LAYOUT_BK_PREFIX)}
+        return {"bookkeeping": bk,
+                "kv": self.layout.snapshot_slot(self.kv, self.bookkeeping,
+                                                self.axes, slot)}
+
+    def restore_slot(self, slot: jax.Array,
+                     snap: Dict[str, Dict[str, Any]]) -> "DecodeState":
+        """Inverse of :meth:`snapshot_slot` — one jittable scatter of the
+        snapshot into slot ``slot`` (ANY slot: the snapshot carries no
+        slot identity).  Bit-exact: the snapshot is in the physical
+        representation, so nothing is re-quantized or re-paged on the
+        way back in.  Paged layouts scatter through the destination
+        slot's CURRENT page-table row, which the caller must have
+        pointed at exclusively-owned pages first."""
+        bk = dict(self.bookkeeping)
+        for name, src in snap["bookkeeping"].items():
+            bk[name] = jax.lax.dynamic_update_slice_in_dim(
+                self.bookkeeping[name], src.astype(bk[name].dtype), slot,
+                axis=self.axes[name])
+        kv = self.layout.restore_slot(self.kv, self.bookkeeping, self.axes,
+                                      slot, snap["kv"])
+        return DecodeState(kv, bk, self.axes, self.layout)
+
 
 # ---------------------------------------------------------------------------
 # Sampling + chunked decode (zero per-token host syncs)
@@ -598,6 +635,19 @@ class DecodeAPI:
         never rewrite resident pages, so nothing is anticipated."""
         return np.zeros((state.slots,), bool)
 
+    # admission caching (session tiering) ------------------------------------
+    def admission_key(self, tokens: np.ndarray,
+                      extras: Optional[Dict[str, Any]] = None
+                      ) -> Optional[bytes]:
+        """Content digest under which this request's POST-ADMISSION slot
+        state may be stored and re-used, or None when admission is not a
+        pure function of (params, prompt ids) — the default.  Families
+        whose admission recomputes state that depends only on the prompt
+        (the tconst/tlin O(N) resync) return a digest, so a scheduler
+        with a tier store turns re-admission of a known prompt into an
+        O(1) restore with zero forward compute."""
+        return None
+
     # fused step ------------------------------------------------------------
     def step(self, params, state: DecodeState, token: jax.Array
              ) -> Tuple[jax.Array, DecodeState]:
@@ -770,6 +820,19 @@ class TConstDecode(DecodeAPI):
         the hist_len prefix is resident in pages at admission."""
         g0 = ((prompt_len - 1) % self.cfg.tconst.w_og) + 1
         return prompt_len - g0
+
+    def admission_key(self, tokens, extras=None):
+        """TConst admission is resync + a generation-window pass, both
+        pure functions of the prompt ids (``TC.RESYNC_INPUT_KEYS``) —
+        the ctx/hist KV carries no sampling or wall-clock state — so the
+        admitted slot is content-addressable by prompt digest and a
+        shared-history re-admission becomes an O(1) restore instead of
+        the O(N) resync (the ROADMAP's content-addressed ctx-KV
+        reuse)."""
+        if extras:
+            return None
+        return TC.admission_digest(np.asarray(tokens), self.mode,
+                                   self.cfg.tconst.w_og)
 
     def sync_anticipated(self, state, n_steps):
         """A slot resyncs when gen_len reaches W_og; gen_len grows by at

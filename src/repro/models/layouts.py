@@ -560,6 +560,30 @@ class DenseLayout:
                 dst, v.astype(dst.dtype), tuple(starts))
         return out
 
+    # -- slot snapshot / restore (session tiering) --------------------------
+    def snapshot_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
+                      axes: Dict[str, int],
+                      slot: jax.Array) -> Dict[str, Any]:
+        """Slot ``slot``'s kv in the PHYSICAL representation (batch dim
+        kept at size 1): a plain batch-axis slice per field.  Unlike
+        :meth:`read_slot` this never dequantises — an int8 slot
+        snapshots as its ``__q``/``__scale`` rows, so the host tier
+        holds it compressed and the restore is bit-exact."""
+        return {f: jax.lax.dynamic_slice_in_dim(v, slot, 1,
+                                                self._axis(f, axes))
+                for f, v in kv.items()}
+
+    def restore_slot(self, kv: Dict[str, Any], bk: Dict[str, Any],
+                     axes: Dict[str, int], slot: jax.Array,
+                     snap: Dict[str, Any]) -> Dict[str, Any]:
+        """Exact inverse of :meth:`snapshot_slot`: scatter the physical
+        snapshot back into slot ``slot`` (which need not be the slot it
+        was taken from)."""
+        return {f: jax.lax.dynamic_update_slice_in_dim(
+                    dst, snap[f].astype(dst.dtype), slot,
+                    axis=self._axis(f, axes))
+                for f, dst in kv.items()}
+
 
 # ---------------------------------------------------------------------------
 # int8 with per-vector scales
@@ -886,6 +910,80 @@ class PagedLayout(DenseLayout):
                             + vv.shape[la:])
             idx = (slice(None),) * (la - 1) + (pages,)
             out[f] = dst.at[idx].set(vv)
+        return out
+
+    # -- slot snapshot / restore (session tiering) --------------------------
+    def page_axis(self, field: str) -> Optional[int]:
+        """Physical pool page axis of ``field`` (None for fields that are
+        not paged) — where a slot snapshot's gathered page stack lives,
+        so the scheduler can trim/pad it on the host."""
+        la = self._length_axis(field)
+        return None if la is None else la - 1
+
+    def snapshot_slot(self, kv, bk, axes, slot):
+        """Physical slot snapshot: paged fields gather EXACTLY the
+        slot's page-table row out of the pool — ``(..., pps, page,
+        rest)`` page stacks, int8 pools with their scale pools alongside
+        — and non-paged fields fall back to the batch-axis row slice.
+        Table entries at TRASH gather garbage pages; the host side trims
+        the stack to the slot's live page count, and a restore through a
+        fresh table row re-masks whatever padding comes back."""
+        pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)        # (pps,)
+        out = {}
+        for f, v in kv.items():
+            la = self._length_axis(f)
+            if la is None:
+                out[f] = jax.lax.dynamic_slice_in_dim(
+                    v, slot, 1, self._axis(f, axes))
+            else:
+                out[f] = jnp.take(v, pt_row, axis=la - 1)
+        return out
+
+    def restore_slot(self, kv, bk, axes, slot, snap):
+        """Scatter a snapshot back through slot ``slot``'s CURRENT
+        page-table row (the restoring scheduler assigns fresh,
+        exclusively-owned pages first, so no shared page can be hit;
+        entries at TRASH make the matching snapshot pages dead
+        writes)."""
+        pt_row = jnp.take(bk[PAGE_TABLE], slot, axis=0)        # (pps,)
+        out = {}
+        for f, dst in kv.items():
+            la = self._length_axis(f)
+            if la is None:
+                out[f] = jax.lax.dynamic_update_slice_in_dim(
+                    dst, snap[f].astype(dst.dtype), slot,
+                    axis=self._axis(f, axes))
+            else:
+                ix = (slice(None),) * (la - 1) + (pt_row,)
+                out[f] = dst.at[ix].set(snap[f].astype(dst.dtype))
+        return out
+
+    def gather_pages(self, kv: Dict[str, Any],
+                     pages: jax.Array) -> Dict[str, Any]:
+        """Pool pages ``pages`` (k,) of every paged field as host-bound
+        page stacks — how refcount-0 prefix pages RETIRE into the tier
+        store.  Pad ``pages`` with the trash index for a fixed arity
+        (the padding gathers garbage the caller drops)."""
+        out = {}
+        for f, v in kv.items():
+            la = self._length_axis(f)
+            if la is not None:
+                out[f] = jnp.take(v, pages, axis=la - 1)
+        return out
+
+    def scatter_pages(self, kv: Dict[str, Any], pages: jax.Array,
+                      contents: Dict[str, Any]) -> Dict[str, Any]:
+        """Inverse of :meth:`gather_pages`: upload page ``contents``
+        onto pool pages ``pages`` (k,) — how retired prefix-page content
+        is RE-ADOPTED from the store onto a fresh page during admission.
+        Trash-padded entries are dead writes, as in :meth:`fork_pages`."""
+        out = dict(kv)
+        for f, v in contents.items():
+            la = self._length_axis(f)
+            assert la is not None, (f, "scatter_pages takes paged fields")
+            dst = kv[f]
+            ix = (slice(None),) * (la - 1) + (pages,)
+            out[f] = dst.at[ix].set(v.astype(dst.dtype))
         return out
 
     # -- copy-on-write forking ----------------------------------------------

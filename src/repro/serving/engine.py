@@ -48,7 +48,7 @@ from repro.models.api import ModelAPI, build_decode, decode_chunk
 
 @dataclasses.dataclass
 class StepStats:
-    kind: str              # "prefill" | "hit" | "miss" | "chunk" | "admit"
+    kind: str      # "prefill" | "hit" | "miss" | "chunk" | "admit" | "spill"
     seconds: float
     tokens: int = 1        # tokens produced by this entry (chunks: many)
     # True when this entry's wall-clock includes the one-time jit compile
@@ -58,10 +58,17 @@ class StepStats:
     compiled: bool = False
     # "admit" entries: prompt positions the admission actually FORWARDED
     # (chunked KV-conditioned prefill: the unshared tail padded to the
-    # chunk grid; one-shot prefill: the whole prompt) — the tail-only
-    # compute accounting asserted in tests/test_prefill_chunked.py and
-    # recorded under "chunked_prefill" in BENCH_inference.json.
+    # chunk grid; one-shot prefill: the whole prompt; tier-store restore:
+    # ZERO — the whole point) — the tail-only compute accounting asserted
+    # in tests/test_prefill_chunked.py and recorded under
+    # "chunked_prefill" in BENCH_inference.json.
     forward_tokens: Optional[int] = None
+    # "admit" entries: where the slot state came from — "cold" (prefill
+    # forward), "resume" (a spilled session's pinned tier-store snapshot
+    # restored into a free slot), or "store" (content-addressed admission
+    # cache hit: a known prompt's post-prefill state restored, zero
+    # forward compute).  None for non-admit kinds.
+    source: Optional[str] = None
 
 
 def tag_compiled(warm: set, kind: str, sig: Any = None) -> bool:

@@ -42,12 +42,30 @@ The scheduler owns one fixed-shape multi-slot ``DecodeState`` and admits
   at TRASH before the clearing write, so clearing can never land on a
   page another slot still references; pages whose refcount hits 0
   return to the free pool).
+* **session tiering (spill / resume)** — with a
+  :class:`~repro.serving.tier_store.TierStore` attached, a preempted or
+  idle session SPILLS: its entire slot state is snapshotted in the
+  physical representation (``DecodeState.snapshot_slot`` — int8 stays
+  compressed, paged gathers only the live pages), stored host-side
+  under a content digest of the session, and its slot + pool pages are
+  freed.  A later admission RESUMES it into ANY free slot with one
+  jitted scatter — token-identical to never having left.  With
+  ``preempt_chunks=k``, slots holding their residency for >= k chunks
+  are spilled round-robin whenever sessions wait, so sessions >> slots
+  makes progress fairly.  The same store content-addresses two more
+  things by construction: refcount-0 prefix pages RETIRE into it under
+  their rolling-hash chunk keys (re-adopted — one page upload — on a
+  later admission instead of re-forwarded), and families whose
+  admission is a pure function of the prompt (tconst: the O(N) resync)
+  cache the post-admission slot snapshot by prompt digest, so a known
+  prompt re-admits as an O(1) restore with ZERO forward compute.
 
-Chunk timings are recorded as ``StepStats(kind="chunk")`` entries and
-admissions as ``StepStats(kind="admit")`` in ``admit_stats``; entries
-whose wall-clock includes a one-time jit compile carry
-``compiled=True`` so aggregations (``benchmarks/bench_inference``)
-can exclude them.
+Chunk timings are recorded as ``StepStats(kind="chunk")`` entries (and
+spills as ``kind="spill"``), admissions as ``StepStats(kind="admit")``
+in ``admit_stats`` with ``source`` naming where the slot state came
+from ("cold" / "resume" / "store"); entries whose wall-clock includes a
+one-time jit compile carry ``compiled=True`` so aggregations
+(``benchmarks/bench_inference``) can exclude them.
 """
 from __future__ import annotations
 
@@ -66,6 +84,8 @@ from repro.models import layouts as LT
 from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
 from repro.serving.engine import StepStats, tag_compiled
 from repro.serving.session import Session
+from repro.serving.tier_store import (Blob, TierStore, flatten_slot_snapshot,
+                                      unflatten_slot_snapshot)
 
 
 class SlotScheduler:
@@ -73,7 +93,9 @@ class SlotScheduler:
                  max_len: int, chunk_size: int = 8, seed: int = 0,
                  prefix_sharing: bool = False,
                  max_head_skips: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 tier_store: Optional[TierStore] = None,
+                 preempt_chunks: Optional[int] = None):
         # accept a ModelAPI facade too (duck-typed .decode)
         if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
             decode = decode.decode
@@ -150,6 +172,39 @@ class SlotScheduler:
         self.max_head_skips = 4 * slots if max_head_skips is None \
             else max_head_skips
         self._head_skips = 0
+
+        # session tiering: host-side content-addressed store + preemption
+        if preempt_chunks is not None and preempt_chunks < 1:
+            raise ValueError("preempt_chunks must be positive (or None to "
+                             "disable preemptive spilling)")
+        if preempt_chunks is not None and tier_store is None:
+            raise ValueError("preempt_chunks needs a tier_store to spill "
+                             "preempted sessions into")
+        self.store = tier_store
+        self.preempt_chunks = preempt_chunks
+        self.spill_stats = {"spills": 0, "resumes": 0, "spilled_bytes": 0,
+                            "pages_retired": 0, "pages_readopted": 0,
+                            "admit_store_hits": 0, "admit_store_puts": 0}
+        # chunks each slot has decoded since its current residency began
+        # (admit/resume resets it) — the preemption ripeness clock
+        self._slot_chunks = np.zeros((slots,), np.int64)
+        if self._paged:
+            self._page_axes = {f: self.layout.page_axis(f)
+                               for f in self.state.kv
+                               if self.layout.page_axis(f) is not None}
+        else:
+            self._page_axes = {}
+        if self.store is not None:
+            self._snap = jax.jit(lambda st, slot: st.snapshot_slot(slot))
+            self._restore = jax.jit(
+                lambda st, slot, snap: st.restore_slot(slot, snap))
+            if self._paged:
+                self._gather_pages = jax.jit(
+                    lambda st, idx: self.layout.gather_pages(st.kv, idx))
+                self._scatter_pages = jax.jit(
+                    lambda st, idx, contents: dataclasses.replace(
+                        st, kv=self.layout.scatter_pages(st.kv, idx,
+                                                         contents)))
 
         self.key = jax.random.PRNGKey(seed)
         self.last_token = jnp.zeros((slots,), jnp.int32)
@@ -258,35 +313,275 @@ class SlotScheduler:
         self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
 
     # ------------------------------------------------------------------
+    # session tiering: spill / resume / retire through the TierStore
+    # ------------------------------------------------------------------
+    def _store_salt(self) -> bytes:
+        """Scheduler-level key salt: snapshot shapes and admission
+        numerics depend on max_len, the bound layout and the prefill
+        path, so schedulers differing in any of them must never share
+        store entries.  (Params identity is NOT hashed — a TierStore
+        must not be shared across schedulers serving different
+        weights.)"""
+        return f"{self.max_len}|{self.layout!r}|{self.prefill_chunk}" \
+            .encode()
+
+    def _session_key(self, session: Session) -> bytes:
+        """Content digest of a session's CURRENT state: extras + prompt
+        + every token generated so far.  Two sessions at the same point
+        of the same request share one snapshot entry (pin counts
+        nest)."""
+        h = hashlib.sha1(b"session\x00" + self._store_salt())
+        if session.extras:
+            for name in sorted(session.extras):
+                h.update(name.encode())
+                h.update(np.asarray(session.extras[name]).tobytes())
+        h.update(np.ascontiguousarray(session.prompt, np.int32).tobytes())
+        h.update(np.asarray(session.tokens, np.int32).tobytes())
+        return h.digest()
+
+    def _admission_key(self, session: Session) -> Optional[bytes]:
+        """Store key of this request's post-admission slot state, or
+        None when the family's admission is not a pure function of the
+        prompt ids (``DecodeAPI.admission_key``) or there is no store."""
+        if self.store is None:
+            return None
+        base = self.decode.admission_key(session.prompt, session.extras)
+        if base is None:
+            return None
+        h = hashlib.sha1(b"admit\x00" + self._store_salt())
+        h.update(base)
+        return h.digest()
+
+    def _live_pages(self, session: Session) -> int:
+        """Pages that can hold WRITTEN content for this session right
+        now (prompt + generated ids, one page-granule of slack) — the
+        honest host-tier size of a paged spill; the pages beyond it in
+        the slot's allocation hold nothing a restore needs."""
+        need = len(session.prompt) + len(session.tokens) + 1
+        return -(-need // self.layout.page)
+
+    def _snapshot_slot_host(self, slot: int, n_keep: Optional[int] = None
+                            ) -> Dict[str, Any]:
+        """Device snapshot of ``slot`` pulled to host, with paged page
+        stacks trimmed to the first ``n_keep`` table entries (the live
+        prefix of the slot's allocation)."""
+        snap = jax.device_get(self._snap(self.state, np.int32(slot)))
+        if self._paged and n_keep is not None:
+            n_keep = min(n_keep, len(self._slot_pages[slot]))
+            for f, ax in self._page_axes.items():
+                snap["kv"][f] = np.take(snap["kv"][f], np.arange(n_keep),
+                                        axis=ax)
+        return snap
+
+    def _pad_kv_snapshot(self, kv: Dict[str, Any]) -> Dict[str, Any]:
+        """Pad trimmed paged page stacks back to pages_per_slot (zeros —
+        they scatter onto unwritten pages, masked until written) so the
+        jitted restore has ONE fixed shape."""
+        out = {}
+        pps = self.layout.pages_per_slot if self._paged else 0
+        for f, v in kv.items():
+            ax = self._page_axes.get(f)
+            if ax is not None and v.shape[ax] < pps:
+                widths = [(0, 0)] * v.ndim
+                widths[ax] = (0, pps - v.shape[ax])
+                v = np.pad(np.asarray(v), widths)
+            out[f] = jnp.asarray(v)
+        return out
+
+    def spill(self, slot: int) -> bytes:
+        """Spill the active session in ``slot`` to the tier store:
+        snapshot its entire slot state (physical representation — int8
+        stays compressed, paged holds only live pages), PIN it under the
+        session's content digest, free the slot and its pool pages, and
+        re-queue the session.  A later admission restores it into ANY
+        free slot, token-identical to never having left.  Returns the
+        store key."""
+        assert self.store is not None, "spilling needs a tier_store"
+        session = self.sessions[slot]
+        assert session is not None and not session.done, \
+            "can only spill a live session"
+        t0 = time.perf_counter()
+        snap = self._snapshot_slot_host(
+            slot, self._live_pages(session) if self._paged else None)
+        blob = flatten_slot_snapshot(snap, {
+            "kind": "session", "sid": session.sid,
+            "last_token": int(np.asarray(self.last_token[slot]))})
+        key = self._session_key(session)
+        self.store.put(key, blob, pin=True)
+        self.stats.append(StepStats(
+            "spill", time.perf_counter() - t0,
+            tokens=len(session.prompt) + len(session.tokens),
+            compiled=tag_compiled(self._warm, "spill")))
+        session.snap_key = key
+        session.spills += 1
+        session.slot = None
+        self.spill_stats["spills"] += 1
+        self.spill_stats["spilled_bytes"] += blob.nbytes
+        self._release(slot)
+        self.pending.append(session)
+        return key
+
+    def _resume(self, session: Session, slot: int,
+                plan: Dict[str, Any]) -> None:
+        """Admission path for a spilled session: allocate fresh private
+        pages, restore the pinned snapshot into ``slot`` with ONE jitted
+        scatter, and unpin.  No prefill, no sampling — the session's
+        last sampled token rides in the snapshot meta and decode picks
+        up exactly where it left off."""
+        blob = self.store.get(session.snap_key)
+        assert blob is not None, \
+            "pinned session snapshot disappeared from the tier store"
+        bk_rows, kv_rows, meta = unflatten_slot_snapshot(blob)
+        if self._paged:
+            fresh = [self.free_pages.pop() for _ in range(plan["total"])]
+            for p in fresh:
+                self._page_ref[p] = 1
+            self._set_table_row(slot, fresh)
+        t0 = time.perf_counter()
+        dev = {"bookkeeping": {n: jnp.asarray(np.asarray(v))
+                               for n, v in bk_rows.items()},
+               "kv": self._pad_kv_snapshot(kv_rows)}
+        self.state = self._restore(self.state, np.int32(slot), dev)
+        jax.block_until_ready(self.state.kv)
+        self.admit_stats.append(StepStats(
+            "admit", time.perf_counter() - t0,
+            tokens=len(session.prompt) + len(session.tokens),
+            compiled=tag_compiled(self._warm, "admit", ("resume",)),
+            forward_tokens=0, source="resume"))
+        self.store.unpin(session.snap_key)
+        session.snap_key = None
+        session.resumes += 1
+        self.spill_stats["resumes"] += 1
+        self.last_token = self.last_token.at[slot].set(
+            np.int32(meta["last_token"]))
+        session.slot = slot
+        self.sessions[slot] = session
+        self.active[slot] = True
+        self.temps[slot] = session.temperature
+        self.eos[slot] = -1 if session.eos_id is None else session.eos_id
+        self._slot_chunks[slot] = 0
+
+    def _retire_pages(self, retiring: List) -> None:
+        """Refcount-0 prefix pages RETIRE into the tier store instead of
+        vanishing with their map entry (the pre-tiering bug): their
+        content stays re-adoptable — LRU-evictable, unpinned — under the
+        same rolling-hash chunk key, so residency in the memory
+        hierarchy, not refcount, decides whether a later admission
+        re-forwards the prefix.  ``retiring`` is [(page, key), ...] for
+        pages ABOUT to be recycled; the gather runs before anything can
+        reallocate them."""
+        pps = self.layout.pages_per_slot
+        idx = np.full((pps,), self.layout.trash, np.int32)
+        for i, (p, _) in enumerate(retiring):
+            idx[i] = p
+        gathered = jax.device_get(
+            self._gather_pages(self.state, jnp.asarray(idx)))
+        for i, (_, key) in enumerate(retiring):
+            arrays = {f: np.take(v, np.arange(i, i + 1),
+                                 axis=self._page_axes[f])
+                      for f, v in gathered.items()}
+            self.store.put(key, Blob(arrays, {"kind": "page"}))
+        self.spill_stats["pages_retired"] += len(retiring)
+
+    def _fetch_restorable(self, keys: List[bytes]) -> List[Blob]:
+        """Fetch the planned re-adoptable page blobs; a key that aged
+        out between plan and admit just truncates the restorable run —
+        the tail goes back to cold prefill (page counts are unchanged:
+        restorable pages come from the free pool either way)."""
+        blobs: List[Blob] = []
+        for k in keys:
+            b = self.store.get(k)
+            if b is None:
+                break
+            blobs.append(b)
+        return blobs
+
+    def _upload_pages(self, page_ids: List[int],
+                      blobs: List[Blob]) -> None:
+        """Scatter retired-page content from the store onto freshly
+        allocated pool pages (one fixed-arity jitted write) — the
+        re-adoption that replaces re-forwarding the prefix."""
+        pps = self.layout.pages_per_slot
+        idx = np.full((pps,), self.layout.trash, np.int32)
+        idx[:len(page_ids)] = page_ids
+        contents = {}
+        for f, ax in self._page_axes.items():
+            stack = np.concatenate(
+                [np.asarray(b.arrays[f]) for b in blobs], axis=ax)
+            if stack.shape[ax] < pps:
+                widths = [(0, 0)] * stack.ndim
+                widths[ax] = (0, pps - stack.shape[ax])
+                stack = np.pad(stack, widths)
+            contents[f] = jnp.asarray(stack)
+        self.state = self._scatter_pages(self.state, jnp.asarray(idx),
+                                         contents)
+        self.spill_stats["pages_readopted"] += len(blobs)
+
+    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def _admission_plan(self, session: Session) -> Optional[Dict[str, Any]]:
         """The pages this admission would take, or None if it must wait
         for the free pool.  With prefix sharing, resident pages matching
         the session's prompt-prefix chunks are adopted instead of drawn
-        from the free pool."""
+        from the free pool; with a tier store, chunk keys whose pages
+        RETIRED are planned for re-adoption (fresh page + content
+        upload) and a spilled session / store-hit prompt plans an
+        all-fresh restore."""
+        resume = session.snap_key is not None
+        admit_key = None if resume else self._admission_key(session)
+        # a restore scatters the WHOLE slot, so it must own every page
+        # privately — no adoption; the store probe must not touch LRU
+        admit_hit = admit_key is not None and admit_key in self.store
         if not self._paged:
-            return {"total": 0, "adopted": [], "keys": []}
+            return {"total": 0, "adopted": [], "keys": [],
+                    "restorable": [], "resume": resume,
+                    "admit_key": admit_key, "admit_hit": admit_hit}
         total = self._pages_needed(session)
-        keys = self._chunk_keys(session) if self.prefix_sharing else []
+        keys = [] if (resume or admit_hit or not self.prefix_sharing) \
+            else self._chunk_keys(session)
         adopted: List[int] = []
         for key in keys:
             page = self._prefix_map.get(key)
             if page is None:
                 break
             adopted.append(page)
+        # beyond the resident run, contiguous chunk keys whose pages
+        # retired into the store are re-adoptable: they still need a
+        # fresh page each (counted in total - adopted), plus an upload
+        restorable: List[bytes] = []
+        if self.store is not None:
+            for key in keys[len(adopted):]:
+                if key in self.store:
+                    restorable.append(key)
+                else:
+                    break
         # resyncing models: adopted pages will be forked before this
         # slot's first resync, so their copies count against the pool now
         reserve = len(adopted) if self._fork_reserve else 0
         if total - len(adopted) + reserve > len(self.free_pages):
             return None                # wait for running sessions to retire
-        return {"total": total, "adopted": adopted, "keys": keys}
+        return {"total": total, "adopted": adopted, "keys": keys,
+                "restorable": restorable, "resume": resume,
+                "admit_key": admit_key, "admit_hit": admit_hit}
 
     def _admit(self, session: Session, slot: int,
                plan: Dict[str, Any]) -> None:
+        if plan.get("resume"):
+            self._resume(session, slot, plan)
+            return
+        admit_blob = None
+        if plan.get("admit_hit"):
+            # fetch FIRST (nothing else touches the store before this):
+            # None means the entry aged out since planning — the plan's
+            # all-fresh pages make the cold path below still valid
+            admit_blob = self.store.get(plan["admit_key"])
         mask = None
+        n_resident = 0
         if self._paged:
             n_adopt = len(plan["adopted"])
+            readopt = self._fetch_restorable(plan.get("restorable", [])) \
+                if admit_blob is None else []
             fresh = [self.free_pages.pop()
                      for _ in range(plan["total"] - n_adopt)]
             pages = list(plan["adopted"]) + fresh
@@ -294,22 +589,30 @@ class SlotScheduler:
                 self._page_ref[p] += 1
             for p in fresh:
                 self._page_ref[p] = 1
+            self._set_table_row(slot, pages)
+            n_rest = len(readopt)
+            if n_rest:
+                # upload retired prefix-page content from the store onto
+                # this slot's fresh pages BEFORE the prefill, so the
+                # chunk loop attends it instead of re-forwarding it
+                self._upload_pages(pages[n_adopt:n_adopt + n_rest],
+                                   readopt)
+            n_resident = n_adopt + n_rest
             if self.prefix_sharing:
                 # register this prompt's freshly written stable pages so
-                # later sessions can adopt them (adopted ones already are)
+                # later sessions can adopt them (adopted ones already
+                # are; re-adopted ones re-enter the map resident)
                 for i, key in enumerate(plan["keys"]):
                     if key not in self._prefix_map:
                         self._register(key, pages[i])
-                if n_adopt:
-                    # tail-only admission write: adopted pages hold the
-                    # identical (content-addressed) KV already — CoW says
-                    # never write a page with refcount > 1
+                if n_resident:
+                    # tail-only admission write: resident pages hold the
+                    # identical (content-addressed) KV already — and CoW
+                    # says never write a page with refcount > 1
                     host_mask = np.ones((self.layout.pages_per_slot,), bool)
-                    host_mask[:n_adopt] = False
+                    host_mask[:n_resident] = False
                     mask = jnp.asarray(host_mask)
-            self._set_table_row(slot, pages)
-        resident = len(plan["adopted"]) * self.layout.page \
-            if self._paged else 0
+        resident = n_resident * self.layout.page if self._paged else 0
         chunked = self.prefill_chunk is not None and \
             self.decode.supports_chunked_prefill(session.extras) and \
             self.decode.chunked_prefill_fits(
@@ -318,7 +621,21 @@ class SlotScheduler:
         extras_sig = tuple(sorted(
             (k, tuple(np.shape(v))) for k, v in (session.extras or {}).items()))
         t0 = time.perf_counter()
-        if chunked:
+        if admit_blob is not None:
+            # content-addressed admission-cache hit: the whole
+            # post-prefill slot state (+ its logits) restores in ONE
+            # jitted scatter — the O(N) resync/prefill never runs
+            bk_rows, kv_rows, _ = unflatten_slot_snapshot(admit_blob)
+            dev = {"bookkeeping": {n: jnp.asarray(np.asarray(v))
+                                   for n, v in bk_rows.items()},
+                   "kv": self._pad_kv_snapshot(kv_rows)}
+            self.state = self._restore(self.state, np.int32(slot), dev)
+            logits = jnp.asarray(np.asarray(admit_blob.arrays["logits"]))
+            fwd = 0
+            sig = ("admit_restore", extras_sig)
+            source = "store"
+            self.spill_stats["admit_store_hits"] += 1
+        elif chunked:
             # KV-conditioned chunked admission: forward compute covers
             # only the unshared tail (adopted pages are attended, not
             # recomputed... except the one chunk the logits need), and
@@ -332,6 +649,7 @@ class SlotScheduler:
             fwd = info["forward_tokens"]
             sig = ("chunked", self.prefill_chunk, resident > 0,
                    mask is not None, extras_sig)
+            source = "cold"
         else:
             logits, self.state = self._prefill_slot(
                 self.params, self.state, np.int32(slot),
@@ -341,12 +659,24 @@ class SlotScheduler:
             # the one-shot prefill retraces on any shape change: prompt
             # length, mask presence, AND extras shapes
             sig = (len(session.prompt), mask is not None, extras_sig)
+            source = "cold"
         logits = jax.block_until_ready(logits)
         self._key_cache.pop(session.sid, None)
         self.admit_stats.append(StepStats(
             "admit", time.perf_counter() - t0, tokens=len(session.prompt),
             compiled=tag_compiled(self._warm, "admit", sig),
-            forward_tokens=fwd))
+            forward_tokens=fwd, source=source))
+        if admit_blob is None and plan.get("admit_key") is not None:
+            # cacheable cold admission: the just-admitted slot state is a
+            # pure function of the prompt — snapshot it (pre-sampling)
+            # with its logits so the NEXT admission of this prompt is an
+            # O(1) restore.  Unpinned: LRU decides how long it lives.
+            snap = self._snapshot_slot_host(
+                slot, self._live_pages(session) if self._paged else None)
+            blob = flatten_slot_snapshot(snap, {"kind": "admit"})
+            blob.arrays["logits"] = np.asarray(logits)
+            self.store.put(plan["admit_key"], blob)
+            self.spill_stats["admit_store_puts"] += 1
         self.key, sub = jax.random.split(self.key)
         t0k = sample_tokens(logits[None],
                             jnp.full((1,), session.temperature), sub)[0]
@@ -356,6 +686,7 @@ class SlotScheduler:
         self.active[slot] = True
         self.temps[slot] = session.temperature
         self.eos[slot] = -1 if session.eos_id is None else session.eos_id
+        self._slot_chunks[slot] = 0
         session.deliver([int(t0k)])          # first token: prefill logits
 
     def admit_pending(self) -> bool:
@@ -459,12 +790,22 @@ class SlotScheduler:
                                  self.layout.trash, jnp.int32)
             pt = self.state.bookkeeping[LT.PAGE_TABLE].at[slot].set(trash_row)
             self.state = self.state.with_bookkeeping(**{LT.PAGE_TABLE: pt})
+            retiring = []
             for p in self._slot_pages[slot]:
                 self._page_ref[p] -= 1
                 if self._page_ref[p] == 0:
+                    # tiering bugfix: a refcount-0 prefix page used to
+                    # leave the content map the moment it recycled —
+                    # with a store it retires INTO the tier instead
+                    # (gathered below, before anything can reuse it)
+                    key = self._page_key.get(p)
+                    if self.store is not None and key is not None:
+                        retiring.append((p, key))
                     self._unregister(p)
                     self.free_pages.append(p)
             self._slot_pages[slot] = []
+            if retiring:
+                self._retire_pages(retiring)
         # clear the slot so stale phase counters can't keep firing the
         # on-device resync for an empty row (paged: the writes land on
         # the trash page — the slot no longer owns real pages)
@@ -473,13 +814,35 @@ class SlotScheduler:
         self.last_token = self.last_token.at[slot].set(0)
 
     # ------------------------------------------------------------------
+    def _preempt_for_pending(self) -> int:
+        """Round-robin preemption: when sessions still wait after
+        admission (blocked on slots OR pool pages), active sessions that
+        have decoded at least ``preempt_chunks`` chunks this residency
+        are spilled, longest-resident first, one per waiter.  A fresh
+        residency always decodes >= preempt_chunks before it can be
+        preempted again, so every rotation makes progress and the
+        oversubscribed queue drains fairly."""
+        ripe = [s for s in range(self.slots)
+                if self.active[s]
+                and self._slot_chunks[s] >= self.preempt_chunks]
+        ripe.sort(key=lambda s: -int(self._slot_chunks[s]))
+        n = min(len(ripe), len(self.pending))
+        for s in ripe[:n]:
+            self.spill(int(s))
+        return n
+
     def step(self) -> bool:
         """Admit pending sessions, then decode ONE chunk for the active
         slots (a single dispatch; slots paused for copy-on-write fork
-        headroom are masked out, frozen bit-identically).  Returns False
-        when no progress was made — nothing admitted and nothing could
-        decode."""
+        headroom are masked out, frozen bit-identically).  With a tier
+        store and ``preempt_chunks`` set, slots are preemptively spilled
+        for waiting sessions first.  Returns False when no progress was
+        made — nothing admitted and nothing could decode."""
         admitted = self.admit_pending()
+        if self.store is not None and self.preempt_chunks is not None \
+                and self.pending:
+            if self._preempt_for_pending():
+                admitted = self.admit_pending() or admitted
         if not self.active.any():
             return admitted
         run_mask = self._cow_before_chunk() if self.prefix_sharing \
@@ -497,6 +860,7 @@ class SlotScheduler:
             "chunk", time.perf_counter() - t0, tokens=self.chunk_size,
             compiled=tag_compiled(self._warm, "chunk")))
         for slot in np.nonzero(run_mask)[0]:
+            self._slot_chunks[slot] += 1
             sess = self.sessions[slot]
             sess.deliver(host_toks[slot])
             if sess.done:

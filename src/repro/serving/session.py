@@ -56,6 +56,14 @@ class Session:
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
+    # session tiering (scheduler-managed): while spilled, ``snap_key`` is
+    # the tier-store key of the session's pinned slot snapshot and
+    # ``slot`` is None; a later admission restores it into ANY free slot
+    # and clears the key.  ``spills``/``resumes`` count the completed
+    # HBM -> host -> HBM cycles (the serve demo's per-session report).
+    snap_key: Optional[bytes] = None
+    spills: int = 0
+    resumes: int = 0
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

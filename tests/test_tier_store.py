@@ -1,0 +1,450 @@
+"""Session tiering: the TierStore + spill / resume / retire / re-admit.
+
+Four concerns:
+
+1. **TierStore mechanics** — LRU eviction under a byte capacity, pin
+   semantics (pinned entries survive over capacity without a disk tier;
+   demote-but-never-drop with one), the mmap'd disk tier (demotion,
+   promotion, durable re-indexing), and content-addressed no-rewrite
+   demotion.
+2. **Snapshot/restore** — ``DecodeState.snapshot_slot`` /
+   ``restore_slot`` round-trips a slot bit-exactly into a DIFFERENT
+   slot, in the physical representation (int8 stays quantized).
+3. **Spill/resume parity** — oversubscribed scheduling (sessions >>
+   slots, preemptive spilling at chunk boundaries) streams token-
+   identically to a never-spilled run across
+   ``{dense, paged, int8, paged_int8} x {tconst, lm, encdec}``,
+   including spills landing mid-page, resume into a different slot,
+   and a store squeezed down to LRU-evicting admission entries while
+   pinned session snapshots survive.
+4. **Store-backed admission** — refcount-0 prefix pages retire INTO
+   the store and are re-adopted without re-forwarding the prefix (the
+   regression: they used to leave the content map at recycle), and a
+   tconst prompt whose admission snapshot is resident re-admits with
+   ZERO forward compute — no prefill call, no ``dot_general`` anywhere
+   in the restore program (the O(1) re-admission acceptance bar).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.models import layouts as LT
+from repro.models.api import build_decode, build_model
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+from repro.serving.tier_store import (Blob, TierStore,
+                                      flatten_slot_snapshot,
+                                      unflatten_slot_snapshot)
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def tconst_setup():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tlin_setup():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32",
+                  attention_mode="tlin")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = reduced(get_config("llama3_405b"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def encdec_setup():
+    cfg = reduced(get_config("whisper_small"), dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+def _spec(kind):
+    if kind == "dense":
+        return None
+    return LT.LayoutSpec(kind=kind, page_size=PAGE, pool_pages=40)
+
+
+def _extras(cfg):
+    if not cfg.is_encdec:
+        return None
+    rng = np.random.RandomState(9)
+    return {"audio_feats": rng.randn(
+        cfg.encoder_seq, cfg.frontend_dim).astype(np.float32)}
+
+
+def _prompts(cfg, n, seed=3):
+    rng = np.random.RandomState(seed)
+    # lengths straddle page boundaries so spill points land mid-page
+    return [rng.randint(1, cfg.vocab_size,
+                        size=9 + 4 * i).astype(np.int32) for i in range(n)]
+
+
+def _blob(nbytes, fill=0):
+    return Blob({"x": np.full((nbytes,), fill, np.uint8)}, {"fill": fill})
+
+
+# ---------------------------------------------------------------------------
+# 1. TierStore mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_store_lru_eviction_order_and_stats():
+    st = TierStore(capacity_bytes=256)
+    ka, kb, kc = b"a" * 20, b"b" * 20, b"c" * 20
+    st.put(ka, _blob(100, 1))
+    st.put(kb, _blob(100, 2))
+    assert st.get(ka).meta["fill"] == 1          # LRU-touch: a now newest
+    assert kb in st and ka in st                 # contains: no LRU touch
+    st.put(kc, _blob(100, 3))                    # over capacity: b evicts
+    assert kb not in st and ka in st and kc in st
+    assert st.get(kb) is None
+    assert st.stats["evictions"] == 1 and st.stats["misses"] == 1
+    assert st.occupancy_bytes == 200 and len(st) == 2
+    assert st.pop(ka).meta["fill"] == 1
+    assert ka not in st and len(st) == 1
+
+
+def test_store_pin_survives_capacity_without_disk_tier():
+    st = TierStore(capacity_bytes=64)
+    kp, kv = b"p" * 20, b"v" * 20
+    st.put(kp, _blob(100, 7), pin=True)          # alone it exceeds capacity
+    assert kp in st                              # pinned: kept over capacity
+    st.put(kv, _blob(100, 8))
+    assert kv not in st and kp in st             # unpinned victim dropped
+    st.unpin(kp)
+    st.put(kv, _blob(100, 8))                    # both now unpinned and each
+    assert kp not in st and kv not in st         # over capacity: both evict
+
+
+def test_store_disk_tier_demotes_promotes_and_reindexes(tmp_path):
+    st = TierStore(capacity_bytes=128, spill_dir=str(tmp_path / "tier"))
+    ka, kb = b"a" * 20, b"b" * 20
+    payload = np.arange(100, dtype=np.uint8)
+    st.put(ka, Blob({"x": payload}, {"tag": "first"}), pin=True)
+    st.put(kb, _blob(100, 2))                    # demotes a (pinned is ok
+    assert st.stats["demotions"] == 1            # WITH a disk tier below)
+    assert ka in st and st.disk_bytes == 100
+    got = st.get(ka)                             # promotion from disk
+    assert st.stats["promotions"] == 1
+    np.testing.assert_array_equal(np.asarray(got.arrays["x"]), payload)
+    assert got.meta["tag"] == "first"
+    # demotion of a key already on disk skips the rewrite
+    st.get(kb)
+    st.put(b"c" * 20, _blob(100, 3))
+    assert st.stats["demotions"] >= 2
+    # a spill dir is durable: a fresh store re-indexes it
+    st2 = TierStore(capacity_bytes=128, spill_dir=str(tmp_path / "tier"))
+    assert ka in st2
+    np.testing.assert_array_equal(
+        np.asarray(st2.get(ka).arrays["x"]), payload)
+
+
+def test_flatten_unflatten_snapshot_roundtrip():
+    snap = {"bookkeeping": {"pos": np.array([3])},
+            "kv": {"ctx_k": np.zeros((1, 2, 4), np.float32)}}
+    blob = flatten_slot_snapshot(snap, {"kind": "test"})
+    blob.arrays["logits"] = np.ones((7,), np.float32)   # unprefixed extra
+    bk, kv, meta = unflatten_slot_snapshot(blob)
+    assert set(bk) == {"pos"} and set(kv) == {"ctx_k"}
+    assert meta["kind"] == "test" and "logits" not in bk and "logits" not in kv
+
+
+# ---------------------------------------------------------------------------
+# 2. DecodeState.snapshot_slot / restore_slot round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "int8"])
+def test_snapshot_restores_into_different_slot_bit_exact(tconst_setup, kind):
+    """Slot 0's snapshot restored into slot 1 reproduces slot 0's rows
+    bit-exactly in the PHYSICAL representation (int8: the quantized
+    payload and scales themselves round-trip, no re-quantization)."""
+    cfg, api, params = tconst_setup
+    dec = build_decode(cfg, _spec(kind))
+    sched = SlotScheduler(dec, params, slots=2, max_len=96, chunk_size=4)
+    sched.submit(Session(_prompts(cfg, 1)[0], max_new_tokens=5))
+    sched.run()                       # slot 0 holds a real decoded state
+    snap = jax.device_get(sched.state.snapshot_slot(0))
+    state = sched.state.restore_slot(1, jax.device_get(snap))
+    for part in ("bookkeeping", "kv"):
+        src = snap[part]
+        for name, row in src.items():
+            arrs = getattr(state, part)
+            if part == "bookkeeping":
+                ax = state.axes[name]
+            else:
+                ax = state.layout._axis(name, state.axes)
+            got = np.take(np.asarray(arrs[name]), [1], axis=ax)
+            np.testing.assert_array_equal(got, np.asarray(row), err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# 3. spill / resume stream parity (oversubscribed), layouts x families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "int8", "paged_int8"])
+@pytest.mark.parametrize("family", ["tconst", "tlin", "lm", "encdec"])
+def test_spill_resume_token_identical(family, kind, request):
+    """4 sessions / 2 slots with preemptive spilling every chunk: every
+    stream matches the same layout's never-spilled run exactly and every
+    excess session completes >= 1 full spill->resume cycle.  Prompt
+    lengths straddle page boundaries, so the spill points land mid-page
+    (and, with gen=8 vs chunk=4, mid-generation between prefill-chunk
+    boundaries)."""
+    cfg, api, params = request.getfixturevalue(f"{family}_setup")
+    prompts = _prompts(cfg, 4)
+
+    def run(slots, store=None, preempt=None):
+        sched = SlotScheduler(build_decode(cfg, _spec(kind)), params,
+                              slots=slots, max_len=96, chunk_size=4,
+                              prefix_sharing=kind.startswith("paged"),
+                              tier_store=store, preempt_chunks=preempt)
+        sessions = [sched.submit(Session(
+            p, max_new_tokens=8, extras=_extras(cfg)))
+            for p in prompts]
+        sched.run()
+        return sched, sessions
+
+    _, ref = run(slots=4)
+    store = TierStore(capacity_bytes=1 << 30)
+    sched, spl = run(slots=2, store=store, preempt=1)
+    for r, s in zip(ref, spl):
+        assert r.tokens == s.tokens, "spilling changed the stream"
+    # >= 1 full cycle per excess session (4 sessions - 2 slots = 2)
+    assert sum(1 for s in spl if s.resumes >= 1) >= 2
+    assert sched.spill_stats["spills"] == sched.spill_stats["resumes"] > 0
+    resumes = [a for a in sched.admit_stats if a.source == "resume"]
+    assert resumes and all(a.forward_tokens == 0 for a in resumes)
+    assert not store.pinned_keys()     # every spill was resumed + unpinned
+    if sched._paged:         # pure tconst pages nothing: no pool to check
+        assert (sched.page_refcounts() == 0).all()
+        assert len(sched.free_pages) == 40
+
+
+def test_manual_spill_resumes_into_different_slot(tconst_setup):
+    """Deterministic slot migration: spill A out of slot 0, occupy slot
+    0 with another session, and A's resume must land in slot 1 with the
+    stream still exact."""
+    cfg, api, params = tconst_setup
+    pa, pb = _prompts(cfg, 2, seed=5)
+    store = TierStore()
+    sched = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                          slots=2, max_len=96, chunk_size=4,
+                          tier_store=store)
+    sa = sched.submit(Session(pa, max_new_tokens=10))
+    sched.step()                                 # A decodes in slot 0
+    assert sa.slot == 0 and len(sa.tokens) == 5
+    key = sched.spill(0)
+    assert sa.slot is None and sa.snap_key == key
+    assert key in store and key in store.pinned_keys()
+    sb = sched.submit(Session(pb, max_new_tokens=4))
+    sched.pending.rotate(-1)                     # B ahead of A: B gets slot 0
+    sched.admit_pending()
+    assert sb.slot == 0                          # slot 0 taken before resume
+    assert sa.slot == 1 and sa.resumes == 1      # A migrated to slot 1
+    sched.run()
+    ref = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                        slots=2, max_len=96, chunk_size=4)
+    ra = ref.submit(Session(pa, max_new_tokens=10))
+    ref.run()
+    assert sa.tokens == ra.tokens
+
+
+def test_tight_store_capacity_keeps_pinned_spills_exact(tconst_setup):
+    """A store squeezed far below the working set LRU-evicts unpinned
+    admission entries, but pinned session snapshots survive (no disk
+    tier) and parity still holds."""
+    cfg, api, params = tconst_setup
+    prompts = _prompts(cfg, 3, seed=7)
+
+    def run(slots, store=None, preempt=None):
+        sched = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                              slots=slots, max_len=96, chunk_size=4,
+                              prefix_sharing=True, tier_store=store,
+                              preempt_chunks=preempt)
+        ss = [sched.submit(Session(p, max_new_tokens=8)) for p in prompts]
+        sched.run()
+        return [s.tokens for s in ss]
+
+    ref = run(slots=3)
+    store = TierStore(capacity_bytes=4096)       # << one slot snapshot
+    assert run(slots=1, store=store, preempt=1) == ref
+    assert store.stats["evictions"] > 0          # admission entries squeezed
+    assert not store.pinned_keys()               # every spill resumed
+
+
+def test_disk_tier_spill_resume_roundtrip(tconst_setup, tmp_path):
+    """With a spill directory, a squeezed RAM tier demotes snapshots to
+    disk and resumes promote them back — streams stay exact and bytes
+    really land on disk."""
+    cfg, api, params = tconst_setup
+    prompts = _prompts(cfg, 3, seed=8)
+
+    def run(slots, store=None, preempt=None):
+        sched = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                              slots=slots, max_len=96, chunk_size=4,
+                              tier_store=store, preempt_chunks=preempt)
+        ss = [sched.submit(Session(p, max_new_tokens=8)) for p in prompts]
+        sched.run()
+        return [s.tokens for s in ss]
+
+    ref = run(slots=3)
+    store = TierStore(capacity_bytes=4096, spill_dir=str(tmp_path / "t"))
+    assert run(slots=1, store=store, preempt=1) == ref
+    assert store.stats["demotions"] > 0 and store.stats["promotions"] > 0
+    assert any((tmp_path / "t").iterdir())
+
+
+# ---------------------------------------------------------------------------
+# 4. store-backed admission: retired-page re-adoption + tconst O(1) hit
+# ---------------------------------------------------------------------------
+
+
+def test_retired_prefix_pages_readopted_without_reforward(lm_setup):
+    """The satellite bugfix regression: after the only sharer of a
+    prefix retires, its refcount-0 pages must retire INTO the store
+    (pre-fix they left the content map at recycle) so a later admission
+    of the same prefix re-adopts them — forwarding only the tail — and
+    still streams exactly like a cold run."""
+    cfg, api, params = lm_setup
+    rng = np.random.RandomState(11)
+    common = rng.randint(1, cfg.vocab_size, size=4 * PAGE).astype(np.int32)
+    pa = np.concatenate([common, rng.randint(
+        1, cfg.vocab_size, size=PAGE).astype(np.int32)])
+    pb = np.concatenate([common, rng.randint(
+        1, cfg.vocab_size, size=PAGE).astype(np.int32)])
+
+    store = TierStore()
+    sched = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                          slots=1, max_len=96, chunk_size=4,
+                          prefix_sharing=True, prefill_chunk=PAGE,
+                          tier_store=store)
+    sa = sched.submit(Session(pa, max_new_tokens=4))
+    sched.run()                                   # A done: pages recycled
+    assert sched.spill_stats["pages_retired"] > 0
+    assert not sched._prefix_map                  # nothing RESIDENT anymore
+    assert len(sched.free_pages) == 40
+    assert len(store) >= 4                        # ...but the content lives
+
+    sb = sched.submit(Session(pb, max_new_tokens=4))
+    sched.admit_pending()
+    admit = sched.admit_stats[-1]
+    assert sched.spill_stats["pages_readopted"] >= 4
+    assert admit.forward_tokens < len(pb)         # tail-only: no re-forward
+    sched.run()
+
+    cold = SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                         slots=1, max_len=96, chunk_size=4,
+                         prefill_chunk=PAGE)
+    rb = cold.submit(Session(pb, max_new_tokens=4))
+    cold.run()
+    assert sb.tokens == rb.tokens, "re-adoption changed the stream"
+
+
+def _jaxpr_primitives(jaxpr, acc):
+    """All primitive names in a jaxpr, recursing into call/scan/cond
+    sub-jaxprs carried in eqn params."""
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for val in eqn.params.values():
+            for v in (val if isinstance(val, (tuple, list)) else (val,)):
+                inner = getattr(v, "jaxpr", v)
+                if hasattr(inner, "eqns"):
+                    _jaxpr_primitives(inner, acc)
+    return acc
+
+
+def test_tconst_store_hit_readmission_zero_resync(tconst_setup):
+    """The O(1) re-admission acceptance bar: admitting a prompt whose
+    admission snapshot is in the store must (a) never call a prefill
+    entry point, (b) report zero forwarded tokens, (c) run a restore
+    program with no ``dot_general`` in it (count-asserted on the
+    jaxpr), and (d) stream identically to the cold admission."""
+    cfg, api, params = tconst_setup
+    prompt = _prompts(cfg, 1, seed=13)[0]
+    store = TierStore()
+
+    def make():
+        return SlotScheduler(build_decode(cfg, _spec("paged")), params,
+                             slots=2, max_len=96, chunk_size=4,
+                             prefix_sharing=True, tier_store=store)
+
+    s1 = make()
+    a = s1.submit(Session(prompt.copy(), max_new_tokens=8))
+    s1.run()
+    assert s1.admit_stats[-1].source == "cold"
+    assert s1.spill_stats["admit_store_puts"] == 1
+
+    s2 = make()
+
+    def boom(*a, **k):                     # the O(N) paths must not run
+        raise AssertionError("prefill ran on a store-hit admission")
+
+    class NoPrefillDecode:                 # forwarding proxy: only the
+        def __init__(self, inner):         # prefill entry points are mined
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        prefill_into_slot = prefill_into_slot_chunked = staticmethod(boom)
+
+    s2.decode = NoPrefillDecode(s2.decode)
+    s2._prefill_slot = boom
+    b = s2.submit(Session(prompt.copy(), max_new_tokens=8))
+    s2.run()
+    admit = s2.admit_stats[0]
+    assert admit.source == "store" and admit.forward_tokens == 0
+    assert s2.spill_stats["admit_store_hits"] == 1
+    assert b.tokens == a.tokens
+
+    # the restore program itself: one scatter, zero matmuls
+    snap = jax.device_get(s2._snap(s2.state, np.int32(0)))
+    closed = jax.make_jaxpr(
+        lambda st, slot, sn: st.restore_slot(slot, sn))(
+        s2.state, np.int32(0), snap)
+    prims = _jaxpr_primitives(closed.jaxpr, set())
+    assert "dot_general" not in prims and "conv_general_dilated" not in prims
+
+
+def test_store_salt_separates_incompatible_schedulers(tconst_setup):
+    """Admission snapshots must not cross schedulers whose max_len,
+    layout, or prefill path differ — the salt keys them apart."""
+    cfg, api, params = tconst_setup
+    prompt = _prompts(cfg, 1, seed=17)[0]
+    store = TierStore()
+    s1 = SlotScheduler(build_decode(cfg, _spec("paged")), params, slots=1,
+                       max_len=96, chunk_size=4, tier_store=store)
+    sa = s1.submit(Session(prompt.copy(), max_new_tokens=6))
+    s1.run()
+    s2 = SlotScheduler(build_decode(cfg, _spec("paged")), params, slots=1,
+                       max_len=64, chunk_size=4, tier_store=store)
+    sb = s2.submit(Session(prompt.copy(), max_new_tokens=6))
+    s2.run()
+    assert s2.spill_stats["admit_store_hits"] == 0    # different max_len
+    assert s2.admit_stats[0].source == "cold"
+    assert sa.tokens == sb.tokens
+
+
+def test_preemption_requires_store_and_validates_args(tconst_setup):
+    cfg, api, params = tconst_setup
+    dec = build_decode(cfg, _spec("paged"))
+    with pytest.raises(ValueError, match="needs a tier_store"):
+        SlotScheduler(dec, params, slots=1, max_len=96, chunk_size=4,
+                      preempt_chunks=1)
+    with pytest.raises(ValueError, match="must be positive"):
+        SlotScheduler(dec, params, slots=1, max_len=96, chunk_size=4,
+                      tier_store=TierStore(), preempt_chunks=0)
