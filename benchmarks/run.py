@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig8,eq,fig6,table1]
+  PYTHONPATH=src python -m benchmarks.run [--only fig8,eq,fig6,table1,serving]
 
 Prints ``name,us_per_call,derived`` CSV rows (plus derived claim checks).
 Roofline terms come from the dry-run artifacts via ``benchmarks.roofline``
@@ -16,7 +16,7 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig8,eq,fig6,table1")
+                    help="comma list: fig8,eq,fig6,table1,ablation,serving")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -30,6 +30,7 @@ def main(argv=None) -> int:
         ("fig8", "benchmarks.bench_inference"),
         ("table1", "benchmarks.bench_ppl"),
         ("ablation", "benchmarks.bench_ablation"),
+        ("serving", "benchmarks.bench_serving"),
     ]
     for key, modname in suites:
         if only is not None and key not in only:

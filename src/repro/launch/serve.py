@@ -57,10 +57,20 @@ resume cycles and assigned-vs-spilled bytes)::
   PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
       --sessions 6 --slots 2 --gen 16 --layout paged --page-size 16 \\
       --spill-capacity-mb 64
+
+SLO-aware scheduling demo (``--workload`` replays a seeded traffic
+trace — poisson or bursty arrivals, length mixes, SLO slice — through
+the scheduler under a named policy and prints the telemetry summary;
+compare ``--policy fifo`` vs ``--policy slo`` on the same trace)::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
+      --sessions 8 --slots 2 --chunk 4 --max-len 104 \\
+      --workload bursty --policy slo --slo-ttft-chunks 6
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -71,9 +81,11 @@ from repro.config import get_config, reduced
 from repro.models.api import build_decode, build_model
 from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
+from repro.serving.metrics import ServingTelemetry
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
 from repro.serving.tier_store import TierStore
+from repro.serving.workload import WorkloadSpec, generate_workload
 
 
 def _layout_spec(args) -> LayoutSpec:
@@ -118,6 +130,14 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             ap.error(f"--prefill-chunk {args.prefill_chunk} must be a "
                      f"multiple of --page-size {args.page_size} — "
                      f"chunk-granular page writes cover whole pages")
+    if args.workload and not args.sessions:
+        ap.error("--workload replays a traffic trace through the session "
+                 "scheduler (arrivals, SLOs, policies are admission-side "
+                 "concepts; the uniform batch has none) — add --sessions N")
+    if args.slo_ttft_chunks < 1:
+        ap.error(f"--slo-ttft-chunks {args.slo_ttft_chunks} must be >= 1 "
+                 f"(the deadline is counted in scheduler chunks from "
+                 f"submission)")
     if args.spill_capacity_mb < 0:
         ap.error(f"--spill-capacity-mb {args.spill_capacity_mb} must be "
                  f"positive (0 disables session tiering)")
@@ -173,6 +193,70 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             f"{args.chunk} needs {worst_need} pages of {args.page_size} "
             f"tokens — raise --pool-pages to >= {worst_need} or shrink "
             f"the sessions")
+
+
+def run_workload(cfg, api, params, args, max_len: int) -> int:
+    """SLO-aware scheduling demo: replay a seeded traffic trace through
+    the scheduler under a named policy and print the telemetry summary.
+
+    The trace is a pure function of ``(spec, --seed)`` — rerunning with a
+    different ``--policy`` replays the SAME sessions (same prompts,
+    arrival chunks, SLO targets, per-session sampling seeds), so the
+    printed TTFT / ITL / SLO-attainment numbers are directly comparable
+    across policies.  Arrivals are denominated in scheduler chunks: the
+    loop submits each session once the scheduler clock reaches its
+    ``at_chunk``, then steps until every session drains."""
+    spec = WorkloadSpec(
+        n_sessions=args.sessions, vocab=cfg.vocab_size,
+        arrival=args.workload, temperature=args.temperature,
+        shared_frac=0.25 if args.prefix_sharing else 0.0,
+        prefix_len=args.page_size if args.prefix_sharing else 16,
+        repeat_frac=0.2, slo_frac=0.5,
+        slo_ttft_chunks=args.slo_ttft_chunks)
+    store = None
+    if args.spill_capacity_mb:
+        store = TierStore(
+            capacity_bytes=int(args.spill_capacity_mb * (1 << 20)),
+            spill_dir=args.spill_dir or None)
+    decode = build_decode(cfg, _layout_spec(args),
+                          prefill_chunk=args.prefill_chunk or None)
+    telemetry = ServingTelemetry()
+    sched = SlotScheduler(decode, params, slots=args.slots,
+                          max_len=max_len, chunk_size=args.chunk,
+                          seed=args.seed,
+                          prefix_sharing=args.prefix_sharing,
+                          tier_store=store,
+                          preempt_chunks=1 if store is not None else None,
+                          policy=args.policy, telemetry=telemetry)
+    # leave headroom for the longest output draw (32) + one chunk of
+    # over-generation so every generated session is admissible
+    arrivals = generate_workload(
+        spec, args.seed, max_prompt_len=max(8, max_len - 40 - args.chunk))
+
+    t0 = time.time()
+    i = 0
+    while i < len(arrivals) or sched.pending or sched.active.any():
+        while i < len(arrivals) and arrivals[i].at_chunk <= sched.clock:
+            sched.submit(arrivals[i].session)
+            i += 1
+        sched.step()
+        if sched.clock > 20_000:
+            raise RuntimeError("workload did not drain within 20k chunks "
+                               "— the scheduler is stuck")
+    dt = time.time() - t0
+
+    summary = telemetry.summary()
+    total = summary["tokens_out"]
+    print(f"[serve] arch={cfg.name} mode={cfg.attention_mode} "
+          f"layout={sched.layout.name} workload={args.workload} "
+          f"policy={args.policy} served {summary['sessions']} sessions "
+          f"({total} tokens) on {args.slots} slots in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s)")
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    ok = summary["finished"] == summary["sessions"]
+    print(f"[serve] workload drained: {'ok' if ok else 'FAIL'} "
+          f"(clock={sched.clock} chunks)")
+    return 0 if ok else 1
 
 
 def run_sessions(cfg, api, params, args) -> int:
@@ -349,6 +433,22 @@ def main(argv=None) -> int:
                          "not the prompt length, and a prefix-shared "
                          "admission forwards only its unshared tail; "
                          "0 = one-shot full-prompt prefill")
+    ap.add_argument("--workload", default="",
+                    choices=["", "poisson", "bursty"],
+                    help="replay a seeded traffic trace (sessions mode): "
+                         "poisson or bursty arrivals, prompt/output "
+                         "length mixes, a 50%% TTFT-SLO slice; prints "
+                         "the telemetry summary (TTFT/ITL percentiles, "
+                         "SLO attainment) instead of per-session streams")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "slo"],
+                    help="admission/victim scheduling policy (workload "
+                         "mode): fifo = arrival order; slo = deadline/"
+                         "cost-aware (TTFT-slack admission ordering, "
+                         "cheapest-victim spills)")
+    ap.add_argument("--slo-ttft-chunks", type=int, default=8,
+                    help="TTFT deadline (in scheduler chunks from "
+                         "submission) carried by the workload's SLO "
+                         "slice")
     ap.add_argument("--sessions", type=int, default=0,
                     help="serve N streaming sessions (staggered admission, "
                          "variable prompt lengths) instead of one batch")
@@ -387,6 +487,8 @@ def main(argv=None) -> int:
     params = api.init(jax.random.PRNGKey(args.seed))
 
     if args.sessions:
+        if args.workload:
+            return run_workload(cfg, api, params, args, eff_max_len)
         return run_sessions(cfg, api, params, args)
 
     max_len = args.max_len or (args.prompt_len + args.gen + 64)

@@ -342,11 +342,23 @@ class DecodeState:
 def sample_tokens(logits: jax.Array, temperature: jax.Array,
                   key: jax.Array) -> jax.Array:
     """Per-slot sampling.  logits (B, V); temperature (B,) with <= 0
-    meaning greedy.  Pure device code — safe inside a scanned step."""
+    meaning greedy.  Pure device code — safe inside a scanned step.
+
+    ``key`` may be a single key — one categorical draw over the whole
+    batch, so a slot's sample depends on which other slots share the
+    batch — or a PER-SLOT key array (B, 2), where each row is sampled
+    with its own key and the draw is independent of batch composition
+    (the scheduler uses this for replay-identical session streams)."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = jnp.maximum(temperature, 1e-6)
-    sampled = jax.random.categorical(
-        key, logits / t[:, None], axis=-1).astype(jnp.int32)
+    scaled = logits / t[:, None]
+    if key.ndim == 2:
+        sampled = jax.vmap(
+            lambda k, row: jax.random.categorical(k, row, axis=-1)
+        )(key, scaled).astype(jnp.int32)
+    else:
+        sampled = jax.random.categorical(
+            key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temperature > 0.0, sampled, greedy)
 
 
@@ -369,13 +381,26 @@ def decode_chunk(decode: "DecodeAPI", params: Any, state: DecodeState,
     ``state.bookkeeping`` and is frozen for the rest of the chunk — the
     scheduler evicts it at the chunk boundary.  Returns (sampled tokens
     (B, n_steps), state, key).
+
+    key: a single PRNG key (engine path: one split per step, shared
+    batch draw) or PER-SLOT keys (B, 2) (scheduler path): each live row
+    splits its own key per step and frozen rows do NOT advance, so a
+    session's key-chain position is exactly its generated-token count —
+    invariant to slot placement, batch composition and spill/resume.
     """
+    per_slot = key.ndim == 2
+
     def body(carry, _):
         state, tok, key = carry
         done = state.bookkeeping["done"]
         live = jnp.logical_and(active, jnp.logical_not(done))
         logits, new_state = decode.step(params, state, tok)
-        key, sub = jax.random.split(key)
+        if per_slot:
+            pair = jax.vmap(jax.random.split)(key)       # (B, 2, 2)
+            nxt_key, sub = pair[:, 0], pair[:, 1]
+            key = jnp.where(live[:, None], nxt_key, key)
+        else:
+            key, sub = jax.random.split(key)
         nxt = sample_tokens(logits, temperature, sub)
         nxt = jnp.where(live, nxt, tok)
         new_state = new_state.where_rows(live, state)

@@ -1,5 +1,10 @@
 from repro.models.layouts import LayoutSpec  # noqa: F401
 from repro.serving import engine  # noqa: F401
 from repro.serving.engine import Engine, StepStats  # noqa: F401
+from repro.serving.metrics import ServingTelemetry  # noqa: F401
+from repro.serving.policy import (DeadlineCostPolicy, FifoPolicy,  # noqa: F401
+                                  SchedulingPolicy, get_policy)
 from repro.serving.scheduler import SlotScheduler  # noqa: F401
 from repro.serving.session import Session  # noqa: F401
+from repro.serving.workload import (Arrival, WorkloadSpec,  # noqa: F401
+                                    generate_workload)

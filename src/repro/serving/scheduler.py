@@ -66,6 +66,25 @@ in ``admit_stats`` with ``source`` naming where the slot state came
 from ("cold" / "resume" / "store"); entries whose wall-clock includes a
 one-time jit compile carry ``compiled=True`` so aggregations
 (``benchmarks/bench_inference``) can exclude them.
+
+Two later additions layer policy on top of this mechanism:
+
+* **pluggable scheduling policy** — the WHICH decisions (admission try
+  order, pool-pressure deferral, preemption victims) live in a
+  :class:`~repro.serving.policy.SchedulingPolicy`; the scheduler keeps
+  the invariants (arrival-order queue, bounded overtake budget counted
+  per admission past the oldest waiter — resume-sourced or cold — page
+  refcounts, spill correctness) so no policy can starve or corrupt a
+  session.  ``clock`` counts completed ``step()`` calls — the
+  deterministic time base for SLO deadlines and telemetry
+  (:class:`~repro.serving.metrics.ServingTelemetry` attaches via the
+  ``telemetry`` argument and observes submit/admit/spill/token/retire).
+* **per-session sampling chains** — each slot samples with its own PRNG
+  key chain seeded from the session (``Session.seed``, or the scheduler
+  seed folded with ``sid``), advanced once per generated token and
+  carried across spill/resume, so a session's stream is a pure function
+  of the session itself: replaying a workload trace is token-identical
+  across runs, slot placements and scheduling policies.
 """
 from __future__ import annotations
 
@@ -74,7 +93,7 @@ import dataclasses
 import functools
 import hashlib
 import time
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +102,8 @@ import numpy as np
 from repro.models import layouts as LT
 from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
 from repro.serving.engine import StepStats, tag_compiled
+from repro.serving.metrics import ServingTelemetry
+from repro.serving.policy import FifoPolicy, SchedulingPolicy, get_policy
 from repro.serving.session import Session
 from repro.serving.tier_store import (Blob, TierStore, flatten_slot_snapshot,
                                       unflatten_slot_snapshot)
@@ -95,7 +116,9 @@ class SlotScheduler:
                  max_head_skips: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  tier_store: Optional[TierStore] = None,
-                 preempt_chunks: Optional[int] = None):
+                 preempt_chunks: Optional[int] = None,
+                 policy: Union[SchedulingPolicy, str, None] = None,
+                 telemetry: Optional[ServingTelemetry] = None):
         # accept a ModelAPI facade too (duck-typed .decode)
         if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
             decode = decode.decode
@@ -206,7 +229,12 @@ class SlotScheduler:
                         st, kv=self.layout.scatter_pages(st.kv, idx,
                                                          contents)))
 
-        self.key = jax.random.PRNGKey(seed)
+        # per-slot sampling key chains: row i is the NEXT key of the
+        # session in slot i, advanced on device once per live decode
+        # step (decode_chunk's per-slot mode) and seeded per session at
+        # admission — never from slot position or batch composition.
+        self._base_key = jax.random.PRNGKey(seed)
+        self.slot_keys = jnp.zeros((slots, 2), jnp.uint32)
         self.last_token = jnp.zeros((slots,), jnp.int32)
         self.temps = np.zeros((slots,), np.float32)
         self.eos = np.full((slots,), -1, np.int32)
@@ -216,6 +244,15 @@ class SlotScheduler:
         self.stats: List[StepStats] = []
         self.admit_stats: List[StepStats] = []
         self._warm: set = set()       # (kind, signature) -> compiled tag
+
+        # policy seam + telemetry + deterministic clock (chunk units)
+        if policy is None:
+            policy = FifoPolicy()
+        elif isinstance(policy, str):
+            policy = get_policy(policy)
+        self.policy = policy
+        self.telemetry = telemetry
+        self.clock = 0                # completed step() calls
 
     # ------------------------------------------------------------------
     def _pages_needed(self, session: Session) -> int:
@@ -244,7 +281,10 @@ class SlotScheduler:
                 f"session {session.sid}: needs {self._pages_needed(session)}"
                 f" pages but the paged pool only has "
                 f"{self.layout.pool_pages} — it could never be admitted")
+        session.submit_clock = self.clock
         self.pending.append(session)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(session, self.clock)
         return session
 
     @property
@@ -262,6 +302,35 @@ class SlotScheduler:
     def page_refcounts(self) -> np.ndarray:
         """Host-side per-page refcounts (copy); all zeros when idle."""
         return self._page_ref.copy()
+
+    def spill_cost(self, slot: int) -> Dict[str, int]:
+        """Estimated cost of evicting the session in ``slot``, for
+        cost-aware victim selection: ``bytes`` is the snapshot the spill
+        would move to the host tier (paged: live pages only — a tconst
+        slot's physical KV is O(1)-small; dense LM: the full per-slot
+        row), ``readmit`` the bytes a LATER fresh admission of the same
+        request would cost — zero for families whose admission is a pure
+        function of the prompt (``DecodeAPI.admission_key`` non-None:
+        re-admission is an O(1) store restore), else the snapshot again.
+        Host-side arithmetic only — no device work."""
+        session = self.sessions[slot]
+        assert session is not None, "spill_cost needs an occupied slot"
+        snap_bytes = 0
+        if self._paged:
+            live = self._live_pages(session)
+            for f, v in self.state.kv.items():
+                ax = self._page_axes.get(f)
+                if ax is not None:
+                    snap_bytes += (v.nbytes // v.shape[ax]) * live
+                else:
+                    snap_bytes += v.nbytes // self.slots
+        else:
+            snap_bytes = self.kv_bytes() // self.slots
+        pure = self.decode.admission_key(session.prompt,
+                                         session.extras) is not None
+        readmit = 0 if pure else snap_bytes
+        return {"bytes": int(snap_bytes), "readmit": int(readmit),
+                "total": int(snap_bytes + readmit)}
 
     # ------------------------------------------------------------------
     # prefix sharing: content-addressed page map + refcounts
@@ -415,10 +484,15 @@ class SlotScheduler:
         session.snap_key = key
         session.spills += 1
         session.slot = None
+        # freeze the session's sampling chain at its current position
+        # (= len(session.tokens)) so resume continues the exact stream
+        session.sample_chain = np.asarray(self.slot_keys[slot])
         self.spill_stats["spills"] += 1
         self.spill_stats["spilled_bytes"] += blob.nbytes
         self._release(slot)
         self.pending.append(session)
+        if self.telemetry is not None:
+            self.telemetry.on_spill(session, self.clock)
         return key
 
     def _resume(self, session: Session, slot: int,
@@ -454,12 +528,18 @@ class SlotScheduler:
         self.spill_stats["resumes"] += 1
         self.last_token = self.last_token.at[slot].set(
             np.int32(meta["last_token"]))
+        # resume the sampling chain exactly where the spill froze it
+        self.slot_keys = self.slot_keys.at[slot].set(
+            jnp.asarray(session.sample_chain))
+        session.sample_chain = None
         session.slot = slot
         self.sessions[slot] = session
         self.active[slot] = True
         self.temps[slot] = session.temperature
         self.eos[slot] = -1 if session.eos_id is None else session.eos_id
         self._slot_chunks[slot] = 0
+        if self.telemetry is not None:
+            self.telemetry.on_admit(session, self.clock, "resume")
 
     def _retire_pages(self, retiring: List) -> None:
         """Refcount-0 prefix pages RETIRE into the tier store instead of
@@ -677,9 +757,18 @@ class SlotScheduler:
             blob.arrays["logits"] = np.asarray(logits)
             self.store.put(plan["admit_key"], blob)
             self.spill_stats["admit_store_puts"] += 1
-        self.key, sub = jax.random.split(self.key)
+        # per-session sampling chain: seeded from the session (never
+        # from slot position / batch composition), advanced once here
+        # for the first token and once per live step on device after —
+        # so the chain position is always the generated-token count and
+        # the stream replays identically across runs and policies.
+        chain = jax.random.PRNGKey(session.seed) if session.seed is not None \
+            else jax.random.fold_in(self._base_key, session.sid)
+        pair = jax.random.split(chain)
         t0k = sample_tokens(logits[None],
-                            jnp.full((1,), session.temperature), sub)[0]
+                            jnp.full((1,), session.temperature),
+                            pair[1][None])[0]
+        self.slot_keys = self.slot_keys.at[slot].set(pair[0])
         self.last_token = self.last_token.at[slot].set(t0k)
         session.slot = slot
         self.sessions[slot] = session
@@ -687,34 +776,68 @@ class SlotScheduler:
         self.temps[slot] = session.temperature
         self.eos[slot] = -1 if session.eos_id is None else session.eos_id
         self._slot_chunks[slot] = 0
+        if self.telemetry is not None:
+            self.telemetry.on_admit(session, self.clock, source)
         session.deliver([int(t0k)])          # first token: prefill logits
+        if self.telemetry is not None:
+            self.telemetry.on_tokens(session, len(session.tokens),
+                                     self.clock,
+                                     self.admit_stats[-1].compiled)
 
     def admit_pending(self) -> bool:
         """Admit as many pending sessions as free slots/pages allow.
-        FIFO first; when the HEAD is waiting on pool pages, later
-        sessions that fit are admitted past it — but at most
-        ``max_head_skips`` consecutive overtakes, so freed pages
-        eventually reach the head (no starvation, no head-of-line
-        blocking).  Returns True if any session was admitted."""
+
+        The policy proposes the try order (``order_pending``; FIFO for
+        the baseline) and may defer admissible non-head sessions
+        (``defer_admission``); the scheduler enforces fairness around
+        it: EVERY admission of a session other than the arrival-order
+        head — skip-ahead past a page-blocked head, policy reordering,
+        or a resume-sourced re-admission of a spilled session — counts
+        one overtake against ``max_head_skips``, and a spent budget
+        forces strict arrival order until the head admits (freed pages
+        then necessarily reach it: eventual FIFO, no starvation).  The
+        overtake count is per admitted IDENTITY, not queue position —
+        position-based accounting (the pre-policy code) undercounts
+        once resumes re-enter at the tail and a policy reorders the try
+        list.  Returns True if any session was admitted."""
         free = [i for i in range(self.slots) if not self.active[i]]
         admitted = False
-        idx = 0
-        while free and idx < len(self.pending):
-            session = self.pending[idx]
-            plan = self._admission_plan(session)
-            if plan is None:
-                if idx == 0 and self._head_skips >= self.max_head_skips:
-                    break          # skip budget spent: wait for the head
-                idx += 1
-                continue
-            del self.pending[idx]
-            self._head_skips = self._head_skips + 1 if idx else 0
+        while free and self.pending:
+            head = self.pending[0]
+            if self._head_skips >= self.max_head_skips:
+                candidates: List[Session] = [head]   # budget spent
+            else:
+                candidates = self.policy.order_pending(
+                    list(self.pending), self)
+            chosen = None
+            plan = None
+            for cand in candidates:
+                p = self._admission_plan(cand)
+                if p is None:
+                    continue           # blocked on pool pages — try next
+                if cand is not head and \
+                        self.policy.defer_admission(self, cand, p):
+                    continue           # policy holds it back (never head)
+                chosen, plan = cand, p
+                break
+            if chosen is None:
+                break                  # nothing admissible this round
+            for i, s in enumerate(self.pending):
+                if s is chosen:        # identity, not __eq__ (ndarrays)
+                    del self.pending[i]
+                    break
+            if chosen is head:
+                self._head_skips = 0
+            else:
+                self._head_skips += 1
             slot = free.pop(0)
-            self._admit(session, slot, plan)
+            self._admit(chosen, slot, plan)
             admitted = True
-            if session.done:
+            if chosen.done:
                 self._release(slot)
                 free.insert(0, slot)
+                if self.telemetry is not None:
+                    self.telemetry.on_retire(chosen, self.clock)
         if not self.pending:
             self._head_skips = 0
         return admitted
@@ -815,56 +938,81 @@ class SlotScheduler:
 
     # ------------------------------------------------------------------
     def _preempt_for_pending(self) -> int:
-        """Round-robin preemption: when sessions still wait after
-        admission (blocked on slots OR pool pages), active sessions that
-        have decoded at least ``preempt_chunks`` chunks this residency
-        are spilled, longest-resident first, one per waiter.  A fresh
-        residency always decodes >= preempt_chunks before it can be
-        preempted again, so every rotation makes progress and the
-        oversubscribed queue drains fairly."""
+        """Preemption: when sessions still wait after admission (blocked
+        on slots OR pool pages), active sessions that have decoded at
+        least ``preempt_chunks`` chunks this residency are spill
+        CANDIDATES — the policy picks the victims (baseline: longest-
+        resident first; the SLO policy: cheapest by ``spill_cost``),
+        one per waiter.  A fresh residency always decodes >=
+        preempt_chunks before it can be preempted again, so every
+        rotation makes progress and the oversubscribed queue drains
+        fairly regardless of the victim order."""
         ripe = [s for s in range(self.slots)
                 if self.active[s]
                 and self._slot_chunks[s] >= self.preempt_chunks]
-        ripe.sort(key=lambda s: -int(self._slot_chunks[s]))
         n = min(len(ripe), len(self.pending))
-        for s in ripe[:n]:
+        if not n:
+            return 0
+        victims = self.policy.select_victims(self, ripe, n)[:n]
+        for s in victims:
             self.spill(int(s))
-        return n
+        return len(victims)
+
+    def _tick_telemetry(self) -> None:
+        if self.telemetry is None:
+            return
+        self.telemetry.on_tick(
+            self.clock, self.n_active, len(self.pending),
+            len(self.free_pages) if self._paged else None,
+            self.layout.pool_pages if self._paged else None)
 
     def step(self) -> bool:
         """Admit pending sessions, then decode ONE chunk for the active
         slots (a single dispatch; slots paused for copy-on-write fork
         headroom are masked out, frozen bit-identically).  With a tier
         store and ``preempt_chunks`` set, slots are preemptively spilled
-        for waiting sessions first.  Returns False when no progress was
-        made — nothing admitted and nothing could decode."""
+        for waiting sessions first.  Each call advances ``clock`` by one
+        — the deterministic time base for SLO deadlines and telemetry.
+        Returns False when no progress was made — nothing admitted and
+        nothing could decode."""
+        self.clock += 1
         admitted = self.admit_pending()
         if self.store is not None and self.preempt_chunks is not None \
                 and self.pending:
             if self._preempt_for_pending():
                 admitted = self.admit_pending() or admitted
         if not self.active.any():
+            self._tick_telemetry()
             return admitted
         run_mask = self._cow_before_chunk() if self.prefix_sharing \
             else self.active
         if not run_mask.any():
+            self._tick_telemetry()
             return admitted            # every active slot fork-paused
         t0 = time.perf_counter()
-        toks, self.state, self.key = self._chunk(
-            self.params, self.state, self.last_token, self.key,
+        toks, self.state, self.slot_keys = self._chunk(
+            self.params, self.state, self.last_token, self.slot_keys,
             jnp.asarray(self.temps), jnp.asarray(run_mask),
             n_steps=self.chunk_size, eos=jnp.asarray(self.eos))
         self.last_token = toks[:, -1]
         host_toks = np.asarray(toks)         # the ONE host sync per chunk
+        compiled = tag_compiled(self._warm, "chunk")
         self.stats.append(StepStats(
             "chunk", time.perf_counter() - t0, tokens=self.chunk_size,
-            compiled=tag_compiled(self._warm, "chunk")))
+            compiled=compiled))
         for slot in np.nonzero(run_mask)[0]:
             self._slot_chunks[slot] += 1
             sess = self.sessions[slot]
+            before = len(sess.tokens)
             sess.deliver(host_toks[slot])
+            if self.telemetry is not None:
+                self.telemetry.on_tokens(sess, len(sess.tokens) - before,
+                                         self.clock, compiled)
             if sess.done:
                 self._release(slot)
+                if self.telemetry is not None:
+                    self.telemetry.on_retire(sess, self.clock)
+        self._tick_telemetry()
         return True
 
     def run(self) -> None:

@@ -42,6 +42,19 @@ class Session:
     on_token: optional ``f(session, token)`` streaming callback.
     extras: per-request model inputs beyond tokens (e.g. ``audio_feats``
     for the encoder-decoder, ``vision_embeds``/``vision_mask`` for VLMs).
+    seed: optional per-session sampling seed.  When set, the session's
+    PRNG key chain is ``PRNGKey(seed)`` advanced once per generated
+    token — a pure function of this session's own progress, so replaying
+    the same session (any slot, any policy, after any number of
+    spill/resume cycles) yields the identical token stream.  When None,
+    the chain derives from the scheduler seed and ``sid``.
+    priority: scheduling weight (higher = more urgent); only consulted
+    by priority-aware policies, never by the FIFO baseline.
+    slo_ttft_chunks / slo_itl_chunks: optional SLO targets in scheduler
+    chunk units — deadline for the first token after submission, and the
+    max tolerated inter-token gap.  Pure metadata: policies may order
+    work by them and telemetry scores attainment, but the scheduler
+    mechanism never inspects them.
     """
 
     prompt: np.ndarray
@@ -50,6 +63,10 @@ class Session:
     eos_id: Optional[int] = None
     on_token: Optional[Callable[["Session", int], None]] = None
     extras: Optional[Dict[str, Any]] = None
+    seed: Optional[int] = None
+    priority: int = 0
+    slo_ttft_chunks: Optional[int] = None
+    slo_itl_chunks: Optional[int] = None
 
     # filled by the scheduler -----------------------------------------------
     sid: int = dataclasses.field(default_factory=lambda: next(_IDS))
@@ -64,6 +81,12 @@ class Session:
     snap_key: Optional[bytes] = None
     spills: int = 0
     resumes: int = 0
+    # submit-time scheduler clock (chunk units) — set by ``submit``; the
+    # anchor for TTFT/queue-wait accounting and deadline slack.
+    submit_clock: Optional[int] = None
+    # saved per-slot PRNG key across a spill (the chain position is
+    # ``len(tokens)``, so restoring this key resumes the exact stream).
+    sample_chain: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

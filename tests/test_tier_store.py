@@ -151,6 +151,54 @@ def test_store_disk_tier_demotes_promotes_and_reindexes(tmp_path):
         np.asarray(st2.get(ka).arrays["x"]), payload)
 
 
+def test_put_under_all_pinned_over_capacity_pressure():
+    st = TierStore(capacity_bytes=128)           # no disk tier
+    keys = [bytes([65 + i]) * 20 for i in range(3)]
+    for i, k in enumerate(keys):
+        st.put(k, _blob(100, i), pin=True)
+    # every resident entry is pinned and RAM is 300/128 bytes: the
+    # eviction walk must terminate (skip-all break) dropping nothing
+    assert all(k in st for k in keys)
+    assert st.occupancy_bytes == 300
+    assert st.stats["evictions"] == 0 and st.stats["puts"] == 3
+    ku = b"u" * 20
+    st.put(ku, _blob(50, 9))            # unpinned newcomer: sole victim
+    assert ku not in st
+    assert st.stats["evictions"] == 1
+    assert all(k in st for k in keys) and st.occupancy_bytes == 300
+    assert st.get(keys[1]).meta["fill"] == 1     # content intact
+    # unpinning opens exactly the unpinned entries to the next pass
+    st.unpin(keys[0])
+    st.put(ku, _blob(50, 9))
+    assert keys[0] not in st and ku not in st    # both unpinned: evicted
+    assert keys[1] in st and keys[2] in st       # still pinned: kept
+    assert st.stats["evictions"] == 3
+
+
+def test_promote_on_access_keeps_eviction_order_stable(tmp_path):
+    st = TierStore(capacity_bytes=250, spill_dir=str(tmp_path / "tier"))
+    ka, kb, kc, kd = (x * 20 for x in (b"a", b"b", b"c", b"d"))
+    st.put(ka, _blob(100, 1))
+    st.put(kb, _blob(100, 2))
+    st.put(kc, _blob(100, 3))                    # 300/250: a demotes
+    assert st.stats["demotions"] == 1 and st.disk_bytes == 100
+    assert ka in st._disk and kb not in st._disk
+    got = st.get(ka)                             # promote-on-access
+    assert got.meta["fill"] == 1
+    assert st.stats["promotions"] == 1
+    # the promotion's own capacity pass evicted in LRU order: b (the
+    # oldest resident) demoted — NEVER the just-promoted a, nor c
+    # (white-box peek at the tier maps: __contains__ spans both tiers)
+    assert st.stats["demotions"] == 2
+    assert kb in st._disk and ka in st._ram and kc in st._ram
+    # and a now sits at the young end of the LRU: the next pressure
+    # put demotes c, not the freshly accessed a
+    st.put(kd, _blob(100, 4))
+    assert st.stats["demotions"] == 3
+    assert kc in st._disk and ka in st._ram and kd in st._ram
+    assert st.get(ka) is not None and st.stats["promotions"] == 1
+
+
 def test_flatten_unflatten_snapshot_roundtrip():
     snap = {"bookkeeping": {"pos": np.array([3])},
             "kv": {"ctx_k": np.zeros((1, 2, 4), np.float32)}}
