@@ -24,7 +24,9 @@ tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 from typing import Dict, List
 
 import jax
@@ -39,6 +41,7 @@ from repro.serving.engine import Engine
 N_SWEEP = [256, 512, 1024, 2048]
 GEN = 10
 OUT_JSON = "BENCH_inference.json"
+MESH_SHAPE = (2, 4)                 # (data, model) for the sharded section
 
 
 def _time_steps(api, params, prompt_len: int, max_len: int) -> Dict:
@@ -386,6 +389,109 @@ def _bucketed_admission_scenario(api, params, emit) -> Dict:
             "oneshot_compiled": oneshot}
 
 
+def _sharded_decode_scenario(emit, mesh_shape=None) -> Dict:
+    """Mesh-native decode (PR 9): the SAME decode path on a (data,
+    model) device mesh — per-device vs global KV bytes (head-sharded
+    fields split over the model axis), warm chunked-step latency, and
+    stream identity against the 1-device run.  Runs on a CPU forced to
+    d*m devices via XLA_FLAGS=--xla_force_host_platform_device_count;
+    with fewer devices visible the section records WHY it was skipped
+    instead of silently vanishing from the JSON."""
+    from repro.launch.mesh import make_decode_mesh
+
+    d, m = mesh_shape or MESH_SHAPE
+    n = d * m
+    if len(jax.devices()) < n:
+        reason = (f"needs {n} devices for a {d}x{m} mesh, "
+                  f"{len(jax.devices())} visible (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={n})")
+        emit("sharded_decode/skipped", 1.0, reason)
+        return {"skipped": reason, "mesh": f"{d}x{m}"}
+    mesh = make_decode_mesh(d, m)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    B, L, max_len = 2, 32, 128
+    rows: Dict[str, Dict] = {}
+    scenarios = {
+        "tconst/dense": (reduced(get_config("tconst_41m"),
+                                 dtype="float32"), None),
+        # tlin's O(N) history KV actually lives in pool pages — the row
+        # that proves the paged pool + page tables run sharded
+        "tlin/paged": (reduced(get_config("tconst_41m"), dtype="float32",
+                               attention_mode="tlin"),
+                       LayoutSpec(kind="paged", page_size=16,
+                                  pool_pages=2 * B * (max_len // 16))),
+    }
+    for name, (cfg, spec) in scenarios.items():
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((B, L), jnp.int32)}
+        ref_eng = Engine(api, params, max_len=max_len, layout=spec)
+        ref = ref_eng.generate(batch, GEN)
+        eng = Engine(api, jax.device_put(params, repl), max_len=max_len,
+                     layout=spec, mesh=mesh)
+        out = eng.generate(batch, GEN)
+        identical = bool(np.array_equal(ref, out))
+        state = eng.decode.init_state(B, max_len)
+        glob, per_dev = state.kv_bytes(), state.per_device_kv_bytes()
+        row = {
+            "stream_identical_to_1device": identical,
+            "kv_bytes_global": glob,
+            "kv_bytes_per_device": per_dev,
+            "global_over_per_device": glob / max(per_dev, 1),
+            "chunk_step_ms":
+                1e3 * eng.time_chunked_decode(batch, GEN) / (GEN - 1),
+            "chunk_step_ms_1device":
+                1e3 * ref_eng.time_chunked_decode(batch, GEN) / (GEN - 1),
+        }
+        rows[name] = row
+        emit(f"sharded_decode/{name}/stream_identical", float(identical),
+             f"mesh {d}x{m} vs 1 device (greedy)")
+        emit(f"sharded_decode/{name}/kv_bytes_per_device", per_dev,
+             f"global {glob} ({row['global_over_per_device']:.2f}x; "
+             f"model axis = {m})")
+    return {"mesh": f"{d}x{m}", "devices": n, "batch": B,
+            "prompt_len": L, "gen": GEN, "rows": rows}
+
+
+def validate_payload(payload: Dict, smoke: bool = False) -> List[str]:
+    """Structural check of a ``BENCH_inference.json`` payload (CI gate
+    for the sharded section; full payloads also need the fig8 blocks).
+    Returns a list of problems (empty = valid)."""
+    errs: List[str] = []
+
+    def need(cond: bool, msg: str) -> None:
+        if not cond:
+            errs.append(msg)
+
+    sharded = payload.get("sharded_decode")
+    need(isinstance(sharded, dict), "missing sharded_decode")
+    if isinstance(sharded, dict):
+        if "skipped" in sharded:
+            need(isinstance(sharded["skipped"], str) and sharded["skipped"],
+                 "sharded_decode.skipped must say why")
+        else:
+            rows = sharded.get("rows")
+            need(isinstance(rows, dict) and rows, "sharded_decode: no rows")
+            for name, row in (rows or {}).items():
+                where = f"sharded_decode/{name}"
+                need(row.get("stream_identical_to_1device") is True,
+                     f"{where}: stream differs from the 1-device run")
+                for k in ("kv_bytes_global", "kv_bytes_per_device",
+                          "global_over_per_device", "chunk_step_ms"):
+                    need(isinstance(row.get(k), (int, float)),
+                         f"{where}: missing {k}")
+                if "kv_bytes_per_device" in row:
+                    need(row["kv_bytes_per_device"] <=
+                         row.get("kv_bytes_global", 0),
+                         f"{where}: per-device bytes exceed global")
+    if not smoke and not payload.get("meta", {}).get("smoke"):
+        for k in ("n_sweep", "variants", "layouts", "spill_resume",
+                  "derived"):
+            need(k in payload, f"missing {k}")
+    return errs
+
+
 def run(emit) -> None:
     variants = {
         "base": reduced(get_config("tconst_41m"), dtype="float32",
@@ -473,6 +579,10 @@ def run(emit) -> None:
         # tier bytes per layout, and the tconst admission-cache hit
         # (O(1) re-admission: zero forward tokens) vs cold admission
         "spill_resume": spill_resume,
+        # mesh-native decode: per-device vs global KV bytes, step
+        # latency, and stream identity vs the 1-device run on a forced
+        # multi-device mesh (or a "skipped" reason on 1 device)
+        "sharded_decode": _sharded_decode_scenario(emit),
         "derived": {
             "tconst_hit_flatness": flat,
             "tconst_cache_O1_ratio": cache_ratio,
@@ -481,3 +591,60 @@ def run(emit) -> None:
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     emit("bench_inference_json", 0.0, f"written to {OUT_JSON}")
+
+
+def main(argv=None) -> int:
+    """CLI mirror of ``benchmarks.run``'s entry point, plus the CI modes:
+    ``--smoke --mesh 2x4`` runs JUST the sharded_decode section (the
+    fig8 sweeps are minutes of CPU) and schema-checks it; ``--check``
+    validates an existing payload file."""
+    global MESH_SHAPE
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="sharded_decode section only (CI)")
+    ap.add_argument("--mesh", default="x".join(map(str, MESH_SHAPE)),
+                    help="DxM mesh for the sharded section "
+                         f"(default {MESH_SHAPE[0]}x{MESH_SHAPE[1]})")
+    ap.add_argument("--out", default=OUT_JSON,
+                    help=f"output path (default {OUT_JSON})")
+    ap.add_argument("--check", metavar="JSON",
+                    help="validate an existing payload and exit")
+    args = ap.parse_args(argv)
+    if args.check:
+        with open(args.check) as f:
+            errs = validate_payload(json.load(f))
+        for e in errs:
+            print(f"schema: {e}", file=sys.stderr)
+        print(f"{args.check}: " + ("INVALID" if errs else "ok"))
+        return 1 if errs else 0
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    try:
+        d, m = (int(s) for s in args.mesh.lower().split("x"))
+    except ValueError:
+        ap.error(f"--mesh {args.mesh!r} must be DxM, e.g. 2x4")
+    if args.smoke:
+        payload = {"meta": {"smoke": True, "mesh": args.mesh},
+                   "sharded_decode":
+                       _sharded_decode_scenario(emit, (d, m))}
+    else:
+        MESH_SHAPE = (d, m)
+        payload = None
+        run(emit)
+        with open(OUT_JSON) as f:
+            payload = json.load(f)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    errs = validate_payload(payload, smoke=args.smoke)
+    if errs:
+        for e in errs:
+            print(f"schema: {e}", file=sys.stderr)
+        return 1
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,11 +17,14 @@ listed follow-up in DESIGN.md).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import runtime
 from repro.kernels import ref as REF
@@ -39,6 +42,68 @@ def _pallas_enabled() -> bool:
 
 def _interpret() -> bool:
     return runtime.flags.pallas_interpret and jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Decode-mesh scope (mesh-native serving)
+#
+# The DecodeAPI step/sync/chunk bodies trace inside ``decode_mesh_scope``;
+# while the scope is active the decode and prefill-chunk attention below
+# shard_map themselves over the mesh: query/output head dims and the KV-head
+# dim of the caches split over ``model`` (each shard computes its local
+# head slice — per-head attention is embarrassingly parallel, so the body
+# needs NO collective; the single psum for the output projection is the
+# all-reduce GSPMD inserts at the model-sharded ``wo`` contraction just
+# outside), the slot/batch dim splits over the data axes, and the paged
+# pool rides in REPLICATED over data + sharded over model, so a sharded
+# step never all-gathers the KV pool.  The Pallas page-walk kernel runs
+# per-shard on its local head slice; the XLA fallback is unchanged —
+# both see ordinary smaller arrays inside the shard_map body.
+# ---------------------------------------------------------------------------
+
+_DECODE_MESH: list = [None]
+
+
+@contextlib.contextmanager
+def decode_mesh_scope(mesh):
+    """Trace-time scope; accepts None, a jax Mesh, or anything with a
+    ``.mesh`` attribute (e.g. ``repro.sharding.rules.MeshContext``)."""
+    _DECODE_MESH.append(getattr(mesh, "mesh", mesh))
+    try:
+        yield
+    finally:
+        _DECODE_MESH.pop()
+
+
+def _decode_mesh() -> Optional[Mesh]:
+    return _DECODE_MESH[-1]
+
+
+def _mesh_axes(mesh: Mesh, *, batch: int, heads: Tuple[int, ...]
+               ) -> Tuple[Any, Optional[str]]:
+    """(data spec entry for the batch dim, model spec entry for head
+    dims) — None where the respective sizes don't divide, so partially
+    applicable meshes degrade per-axis instead of bailing out."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    db = None
+    if dsize > 1 and batch % dsize == 0 and batch >= dsize:
+        db = daxes if len(daxes) > 1 else daxes[0]
+    mb = None
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if msize > 1 and all(h % msize == 0 and h >= msize for h in heads):
+        mb = "model"
+    return db, mb
+
+
+def _shard_mapped(inner, mesh: Mesh, in_specs, out_specs):
+    """shard_map with the conventions used here: dict-pytree operands,
+    replication checking off (per-shard valid_len/page tables are
+    intentionally replicated inside a data shard)."""
+    return shard_map(inner, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +160,14 @@ def flash(q: jax.Array, k: jax.Array, v: jax.Array,
 PREFILL_CHUNK_FLASH_ELEMS = 1 << 22
 
 
+def _prefill_chunk_attention_impl(q, k, v, q_pos, k_pos, window, softcap):
+    if q.shape[1] * k.shape[1] >= PREFILL_CHUNK_FLASH_ELEMS:
+        return flash(q, k, v, q_pos, k_pos, window, True, softcap)
+    from repro.layers.attention import make_mask, sdpa
+    mask = make_mask(q_pos, k_pos, "sliding", window)
+    return sdpa(q, k, v, mask, softcap)
+
+
 def prefill_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             q_pos: jax.Array, k_pos: jax.Array,
                             window: "int | jax.Array" = 0,
@@ -108,12 +181,39 @@ def prefill_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     (``window`` may be a traced per-layer scalar).  Large score matrices
     route through the blocked flash path (Pallas when enabled); small
     shapes use the masked reference sdpa — numerically interchangeable.
+    Under a decode-mesh scope the heads split over ``model`` via
+    shard_map (chunk rows are batch-1, so the data axes don't apply).
     """
-    if q.shape[1] * k.shape[1] >= PREFILL_CHUNK_FLASH_ELEMS:
-        return flash(q, k, v, q_pos, k_pos, window, True, softcap)
-    from repro.layers.attention import make_mask, sdpa
-    mask = make_mask(q_pos, k_pos, "sliding", window)
-    return sdpa(q, k, v, mask, softcap)
+    mesh = _decode_mesh()
+    if mesh is not None:
+        db, mb = _mesh_axes(mesh, batch=q.shape[0],
+                            heads=(q.shape[2], k.shape[2]))
+        if db is not None or mb is not None:
+            def _pos_spec(p):
+                b = db if (p.ndim >= 2 and p.shape[0] == q.shape[0]) \
+                    else None
+                return P(*((b,) + (None,) * (p.ndim - 1)))
+            operands: Dict[str, Any] = dict(q=q, k=k, v=v, q_pos=q_pos,
+                                            k_pos=k_pos)
+            specs: Dict[str, P] = dict(
+                q=P(db, None, mb, None), k=P(db, None, mb, None),
+                v=P(db, None, mb, None), q_pos=_pos_spec(q_pos),
+                k_pos=_pos_spec(k_pos))
+            static_window = isinstance(window, int)
+            if not static_window:
+                operands["window"] = jnp.asarray(window)
+                specs["window"] = P()
+
+            def inner(o):
+                w = window if static_window else o["window"]
+                return _prefill_chunk_attention_impl(
+                    o["q"], o["k"], o["v"], o["q_pos"], o["k_pos"], w,
+                    softcap)
+
+            return _shard_mapped(inner, mesh, (specs,),
+                                 P(db, None, mb, None))(operands)
+    return _prefill_chunk_attention_impl(q, k, v, q_pos, k_pos, window,
+                                         softcap)
 
 
 # ---------------------------------------------------------------------------
@@ -121,14 +221,38 @@ def prefill_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def decode_attend_kv(q: jax.Array, k: jax.Array, v: jax.Array,
-                     valid_len: jax.Array, softcap: float = 0.0
-                     ) -> jax.Array:
-    """q: (B, H, D); k/v: (B, S, KV, D); valid_len (B,)."""
+def _decode_attend_kv_impl(q, k, v, valid_len, softcap):
     if _pallas_enabled() and q.shape[-1] % 8 == 0:
         return decode_attention_pallas(q, k, v, valid_len, softcap=softcap,
                                        interpret=_interpret())
     return REF.decode_reference(q, k, v, valid_len, softcap=softcap)
+
+
+def decode_attend_kv(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, softcap: float = 0.0
+                     ) -> jax.Array:
+    """q: (B, H, D); k/v: (B, S, KV, D); valid_len (B,).  Under a
+    decode-mesh scope: slots over data, heads over model (shard_map)."""
+    mesh = _decode_mesh()
+    if mesh is not None:
+        db, mb = _mesh_axes(mesh, batch=q.shape[0],
+                            heads=(q.shape[1], k.shape[2]))
+        if db is not None or mb is not None:
+            inner = functools.partial(_decode_attend_kv_impl,
+                                      softcap=softcap)
+            return _shard_mapped(
+                inner, mesh,
+                (P(db, mb, None), P(db, None, mb, None),
+                 P(db, None, mb, None), P(db)),
+                P(db, mb, None))(q, k, v, valid_len)
+    return _decode_attend_kv_impl(q, k, v, valid_len, softcap)
+
+
+def _int8_decode_fused_impl(q, kq, vq, k_scale, v_scale, valid_len,
+                            softcap, window):
+    return decode_attention_pallas(
+        q, kq, vq, valid_len, softcap=softcap, window=window,
+        k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
 
 
 def int8_decode_fused(q: jax.Array, kq: jax.Array, vq: jax.Array,
@@ -136,10 +260,24 @@ def int8_decode_fused(q: jax.Array, kq: jax.Array, vq: jax.Array,
                       valid_len: jax.Array, softcap: float = 0.0,
                       window: int = 0) -> jax.Array:
     """Fused int8 decode: dequant happens inside the QK/AV loops (1 HBM
-    byte per element).  Caller checks :func:`int8_fused_available`."""
-    return decode_attention_pallas(
-        q, kq, vq, valid_len, softcap=softcap, window=window,
-        k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
+    byte per element).  Caller checks :func:`int8_fused_available`.
+    Under a decode-mesh scope the int8 pools shard like their parents
+    (KV heads over model); the (..., 1) scale dims stay replicated."""
+    mesh = _decode_mesh()
+    if mesh is not None:
+        db, mb = _mesh_axes(mesh, batch=q.shape[0],
+                            heads=(q.shape[1], kq.shape[2]))
+        if db is not None or mb is not None:
+            inner = functools.partial(_int8_decode_fused_impl,
+                                      softcap=softcap, window=window)
+            kv_spec = P(db, None, mb, None)
+            return _shard_mapped(
+                inner, mesh,
+                (P(db, mb, None), kv_spec, kv_spec, kv_spec, kv_spec,
+                 P(db)),
+                P(db, mb, None))(q, kq, vq, k_scale, v_scale, valid_len)
+    return _int8_decode_fused_impl(q, kq, vq, k_scale, v_scale, valid_len,
+                                   softcap, window)
 
 
 def int8_fused_available(window) -> bool:
@@ -154,14 +292,8 @@ def int8_fused_available(window) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def paged_decode(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
-                 page_table: jax.Array, valid_len: jax.Array, *,
-                 softcap: float = 0.0, window: "int | jax.Array" = 0,
-                 k_scale=None, v_scale=None) -> jax.Array:
-    """Layout-native paged decode attention: Pallas page-table-walk
-    kernel on the Pallas path (compiled on TPU, interpret elsewhere),
-    page-at-a-time XLA scan otherwise.  Neither materialises the dense
-    (B, max_len, KV, D) logical view."""
+def _paged_decode_impl(q, pool_k, pool_v, page_table, valid_len, *,
+                       softcap, window, k_scale, v_scale):
     if _pallas_enabled():
         return paged_decode_attention_pallas(
             q, pool_k, pool_v, page_table, valid_len, softcap=softcap,
@@ -170,6 +302,56 @@ def paged_decode(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     return paged_decode_attention_xla(
         q, pool_k, pool_v, page_table, valid_len, softcap=softcap,
         window=window, k_scale=k_scale, v_scale=v_scale)
+
+
+def paged_decode(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                 page_table: jax.Array, valid_len: jax.Array, *,
+                 softcap: float = 0.0, window: "int | jax.Array" = 0,
+                 k_scale=None, v_scale=None) -> jax.Array:
+    """Layout-native paged decode attention: Pallas page-table-walk
+    kernel on the Pallas path (compiled on TPU, interpret elsewhere),
+    page-at-a-time XLA scan otherwise.  Neither materialises the dense
+    (B, max_len, KV, D) logical view.
+
+    Under a decode-mesh scope the step runs inside shard_map: queries
+    split (slots over data, heads over model) and each shard walks the
+    SAME page table over its LOCAL (pool, page, KV/shards, D) pool
+    slice — the pool's page axis stays whole per shard (any slot may
+    own any page), so no all-gather of the pool ever appears."""
+    mesh = _decode_mesh()
+    if mesh is not None:
+        db, mb = _mesh_axes(mesh, batch=q.shape[0],
+                            heads=(q.shape[1], pool_k.shape[-2]))
+        if db is not None or mb is not None:
+            pool_spec = P(None, None, mb, None)
+            operands: Dict[str, Any] = dict(
+                q=q, pool_k=pool_k, pool_v=pool_v, page_table=page_table,
+                valid_len=valid_len)
+            specs: Dict[str, P] = dict(
+                q=P(db, mb, None), pool_k=pool_spec, pool_v=pool_spec,
+                page_table=P(db, None), valid_len=P(db))
+            static_window = isinstance(window, int)
+            if not static_window:
+                operands["window"] = jnp.asarray(window)
+                specs["window"] = P()
+            if k_scale is not None:
+                operands["k_scale"] = k_scale
+                operands["v_scale"] = v_scale
+                specs["k_scale"] = pool_spec
+                specs["v_scale"] = pool_spec
+
+            def inner(o):
+                return _paged_decode_impl(
+                    o["q"], o["pool_k"], o["pool_v"], o["page_table"],
+                    o["valid_len"], softcap=softcap,
+                    window=window if static_window else o["window"],
+                    k_scale=o.get("k_scale"), v_scale=o.get("v_scale"))
+
+            return _shard_mapped(inner, mesh, (specs,),
+                                 P(db, mb, None))(operands)
+    return _paged_decode_impl(q, pool_k, pool_v, page_table, valid_len,
+                              softcap=softcap, window=window,
+                              k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------

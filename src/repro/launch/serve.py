@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_config, reduced
+from repro.launch.mesh import make_decode_mesh
 from repro.models.api import build_decode, build_model
 from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
@@ -195,7 +196,39 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             f"the sessions")
 
 
-def run_workload(cfg, api, params, args, max_len: int) -> int:
+def build_mesh(ap, cfg, args):
+    """Parse and validate ``--mesh DxM`` against the visible devices and
+    the model config, so a bad geometry fails with a clear argparse
+    error instead of a shape crash at first dispatch.  Returns the
+    (data, model) Mesh, or None when --mesh is unset."""
+    if not args.mesh:
+        return None
+    try:
+        d_str, m_str = args.mesh.lower().split("x")
+        d, m = int(d_str), int(m_str)
+        if d < 1 or m < 1:
+            raise ValueError
+    except ValueError:
+        ap.error(f"--mesh {args.mesh!r} must be DxM with positive "
+                 f"integers, e.g. --mesh 2x4")
+    n_dev = len(jax.devices())
+    if d * m != n_dev:
+        ap.error(
+            f"--mesh {args.mesh}: axis product {d}x{m} = {d * m} must "
+            f"equal the device count ({n_dev} visible); on CPU force "
+            f"devices with XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={d * m}")
+    if cfg.n_kv_heads > 1 and cfg.n_kv_heads % m != 0:
+        # MQA (1 KV head) replicates its KV over model instead — exempt
+        ap.error(
+            f"--mesh {args.mesh}: model axis ({m}) must divide the KV "
+            f"heads ({cfg.n_kv_heads}) — decode shards the KV head dim "
+            f"over 'model' (try a model axis in "
+            f"{[k for k in (1, 2, 4, 8) if cfg.n_kv_heads % k == 0]})")
+    return make_decode_mesh(d, m)
+
+
+def run_workload(cfg, api, params, args, max_len: int, mesh=None) -> int:
     """SLO-aware scheduling demo: replay a seeded traffic trace through
     the scheduler under a named policy and print the telemetry summary.
 
@@ -219,7 +252,8 @@ def run_workload(cfg, api, params, args, max_len: int) -> int:
             capacity_bytes=int(args.spill_capacity_mb * (1 << 20)),
             spill_dir=args.spill_dir or None)
     decode = build_decode(cfg, _layout_spec(args),
-                          prefill_chunk=args.prefill_chunk or None)
+                          prefill_chunk=args.prefill_chunk or None,
+                          mesh=mesh)
     telemetry = ServingTelemetry()
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=max_len, chunk_size=args.chunk,
@@ -259,7 +293,7 @@ def run_workload(cfg, api, params, args, max_len: int) -> int:
     return 0 if ok else 1
 
 
-def run_sessions(cfg, api, params, args) -> int:
+def run_sessions(cfg, api, params, args, mesh=None) -> int:
     """Continuous-batching demo: N sessions with different prompt lengths
     admitted at staggered times into a fixed-slot batch; each streams its
     tokens and must match its own single-session generation."""
@@ -283,7 +317,8 @@ def run_sessions(cfg, api, params, args) -> int:
             capacity_bytes=int(args.spill_capacity_mb * (1 << 20)),
             spill_dir=args.spill_dir or None)
     decode = build_decode(cfg, _layout_spec(args),
-                          prefill_chunk=args.prefill_chunk or None)
+                          prefill_chunk=args.prefill_chunk or None,
+                          mesh=mesh)
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
@@ -355,6 +390,13 @@ def run_sessions(cfg, api, params, args) -> int:
               f"{len(set(len(p) for p in prompts))} distinct lengths")
     print(f"[serve] KV-cache bytes ({args.slots} slots, "
           f"{sched.layout.name} layout): {sched.kv_bytes()}")
+    if mesh is not None:
+        # global vs largest per-device shard — head-sharded fields split
+        # over the model axis; greedy solo-run checks below run UNMESHED,
+        # so a match is the meshed-vs-1-device stream identity.
+        print(f"[serve] mesh {'x'.join(str(s) for s in mesh.devices.shape)}"
+              f" ({mesh.devices.size} devices): per-device KV bytes "
+              f"{sched.per_device_kv_bytes()} of {sched.kv_bytes()} global")
 
     ok = True
     if store is not None:
@@ -465,6 +507,14 @@ def main(argv=None) -> int:
                          "snapshots; oversubscribed sessions preempt-"
                          "spill at chunk boundaries and resume token-"
                          "identically; 0 disables tiering")
+    ap.add_argument("--mesh", default="",
+                    help="decode on a (data, model) device mesh, e.g. "
+                         "--mesh 2x4: KV head dim shards over the model "
+                         "axis, slot/batch dims over data; the SAME "
+                         "decode path, token-identical to the 1-device "
+                         "run (see docs/sharding.md; on CPU force "
+                         "devices with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N)")
     ap.add_argument("--spill-dir", default="",
                     help="disk tier below the RAM store: entries evicted "
                          "from --spill-capacity-mb demote to this "
@@ -482,19 +532,27 @@ def main(argv=None) -> int:
     else:
         eff_max_len = args.max_len or (args.prompt_len + args.gen + 64)
     validate_layout_args(ap, cfg, args, eff_max_len)
+    mesh = build_mesh(ap, cfg, args)
 
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(args.seed))
+    if mesh is not None:
+        # params replicate over the mesh (the decode step shards the KV
+        # state, not the weights) — explicit placement keeps GSPMD from
+        # re-deciding per dispatch
+        params = jax.device_put(params, jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()))
 
     if args.sessions:
         if args.workload:
-            return run_workload(cfg, api, params, args, eff_max_len)
-        return run_sessions(cfg, api, params, args)
+            return run_workload(cfg, api, params, args, eff_max_len,
+                                mesh=mesh)
+        return run_sessions(cfg, api, params, args, mesh=mesh)
 
     max_len = args.max_len or (args.prompt_len + args.gen + 64)
     eng = Engine(api, params, max_len=max_len,
                  sample_temperature=args.temperature, seed=args.seed,
-                 layout=_layout_spec(args))
+                 layout=_layout_spec(args), mesh=mesh)
 
     key = jax.random.PRNGKey(args.seed + 1)
     batch = {"tokens": jax.random.randint(

@@ -50,6 +50,7 @@ ShapeDtypeStruct stand-ins used by the multi-pod dry-run (no allocation).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -62,6 +63,7 @@ from repro.layers.common import put_rows, take_rows, where_rows
 from repro.models import encdec as ED
 from repro.models import layouts as LT
 from repro.models import lm as LM
+from repro.sharding import rules as SH
 
 
 def _is_tconst(cfg: ModelConfig) -> bool:
@@ -102,13 +104,19 @@ class DecodeState:
     the paged page table) which are hidden from the dense view.
     ``axes`` (static aux data) maps every DENSE field to its batch
     ("slot") axis; ``layout`` (static aux data) translates dense <->
-    physical and implements layout-aware slot surgery.
+    physical and implements layout-aware slot surgery.  ``mesh`` (static
+    aux data, optional) is a :class:`repro.sharding.rules.MeshContext`:
+    when set, every slot-surgery path re-pins its outputs to the
+    per-field decode shardings (``with_sharding_constraint`` under jit,
+    ``device_put`` eagerly), so the SAME code path runs single-device
+    (mesh=None: all constraints vanish) and mesh-sharded.
     """
 
     kv: Dict[str, jax.Array]
     bookkeeping: Dict[str, jax.Array]
     axes: Dict[str, int]
     layout: Any = dataclasses.field(default_factory=LT.DenseLayout)
+    mesh: Optional[SH.MeshContext] = None
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten_with_keys(self):
@@ -116,13 +124,14 @@ class DecodeState:
             (jax.tree_util.GetAttrKey("kv"), self.kv),
             (jax.tree_util.GetAttrKey("bookkeeping"), self.bookkeeping),
         )
-        return children, (tuple(sorted(self.axes.items())), self.layout)
+        return children, (tuple(sorted(self.axes.items())), self.layout,
+                          self.mesh)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kv, bookkeeping = children
-        axes, layout = aux
-        return cls(kv, bookkeeping, dict(axes), layout)
+        axes, layout, mesh = aux
+        return cls(kv, bookkeeping, dict(axes), layout, mesh)
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -149,6 +158,65 @@ class DecodeState:
         return {k: v for k, v in self.bookkeeping.items()
                 if k.startswith(LT.LAYOUT_BK_PREFIX)}
 
+    # -- mesh placement -----------------------------------------------------
+    def _field_meta(self, name: str, in_kv: bool
+                    ) -> Tuple[Optional[int], Optional[int]]:
+        """(batch_axis, pool_axis) of one physical field — the inputs
+        :func:`repro.sharding.rules.decode_field_spec` needs."""
+        if name.startswith(LT.LAYOUT_BK_PREFIX):
+            return None, None
+        if in_kv:
+            if isinstance(self.layout, LT.PagedLayout):
+                pool_ax = self.layout.page_axis(name)
+                if pool_ax is not None:
+                    return None, pool_ax
+            return self.layout._axis(name, self.axes), None
+        return self.axes.get(name), None
+
+    def field_shardings(self, ctx: SH.MeshContext) -> "DecodeState":
+        """Same-structure DecodeState whose leaves are the per-field
+        NamedShardings of ``ctx`` — usable directly as a jit
+        in/out_shardings pytree.  Works on arrays and on eval_shape
+        structs."""
+        B = self.slots
+        kv = {n: ctx.sharding(n, l.shape, batch=B,
+                              baxis=self._field_meta(n, True)[0],
+                              pool_axis=self._field_meta(n, True)[1])
+              for n, l in self.kv.items()}
+        bk = {n: ctx.sharding(n, l.shape, batch=B,
+                              baxis=self._field_meta(n, False)[0])
+              for n, l in self.bookkeeping.items()}
+        return DecodeState(kv, bk, self.axes, self.layout, ctx)
+
+    def _pinned(self, kv: Dict[str, Any], bk: Dict[str, Any]
+                ) -> "DecodeState":
+        """Build the successor state, re-pinning every field to the
+        decode shardings when a mesh is attached (constraint under
+        tracing, device_put eagerly).  mesh=None is the identity — the
+        single-device path pays nothing."""
+        out = DecodeState(kv, bk, self.axes, self.layout, self.mesh)
+        ctx = self.mesh
+        if ctx is None:
+            return out
+        sh = out.field_shardings(ctx)
+        return DecodeState(
+            {n: ctx.apply(v, sh.kv[n]) for n, v in kv.items()},
+            {n: ctx.apply(v, sh.bookkeeping[n]) for n, v in bk.items()},
+            self.axes, self.layout, ctx)
+
+    def with_mesh(self, mesh) -> "DecodeState":
+        """Attach a mesh context (None | Mesh | MeshContext) and place /
+        constrain every field onto its decode sharding."""
+        ctx = SH.as_mesh_context(mesh)
+        if ctx is None:
+            if self.mesh is None:
+                return self
+            return DecodeState(self.kv, self.bookkeeping, self.axes,
+                               self.layout)
+        staged = DecodeState(self.kv, self.bookkeeping, self.axes,
+                             self.layout, ctx)
+        return staged._pinned(self.kv, self.bookkeeping)
+
     # -- KVView: what the decode kernels consume ----------------------------
     def kv_views(self) -> Dict[str, Any]:
         """Per-field :mod:`repro.models.layouts` FieldViews over the
@@ -173,7 +241,7 @@ class DecodeState:
         bk = {k: v for k, v in views.items()
               if not isinstance(v, LT.FieldView)}
         bk.update(self.layout_bookkeeping())
-        return DecodeState(kv, bk, self.axes, self.layout)
+        return self._pinned(kv, bk)
 
     def merged(self) -> Dict[str, Any]:
         """The dense LOGICAL cache dict (layout-owned bookkeeping
@@ -195,7 +263,7 @@ class DecodeState:
     def with_bookkeeping(self, **updates: Any) -> "DecodeState":
         bk = dict(self.bookkeeping)
         bk.update(updates)
-        return DecodeState(self.kv, bk, self.axes, self.layout)
+        return self._pinned(self.kv, bk)
 
     # -- accounting ---------------------------------------------------------
     def kv_bytes(self) -> int:
@@ -218,8 +286,29 @@ class DecodeState:
         (mapped by several slots) is stored and counted ONCE — while
         non-paged fields report their physical buffers.  This is the
         prefix-sharing headline: physical cache scaling with *distinct*
-        context rather than slot count.  Host-side; concrete arrays."""
+        context rather than slot count.  Host-side; concrete arrays.
+
+        GLOBAL-bytes guarantee: sharded jax Arrays report their global
+        ``shape``/``nbytes``, so this (and :meth:`kv_bytes`,
+        ``spill_cost``, the telemetry occupancy) is the whole-fleet
+        number under a mesh, identical to the 1-device run — the
+        per-device split is :meth:`per_device_kv_bytes`."""
         return LT.assigned_kv_bytes(self.kv_views())
+
+    def per_device_kv_bytes(self) -> int:
+        """Largest per-device share of the PHYSICAL kv buffers: for each
+        addressable device, sum the bytes of its local shards, and
+        report the max (replicated fields count fully on every device).
+        Equals :meth:`kv_bytes` unmeshed; ≈ global / model_shards for
+        the head-sharded decode layout.  Host-side; concrete arrays."""
+        per: Dict[Any, int] = {}
+        for leaf in jax.tree_util.tree_leaves(self.kv):
+            shards = getattr(leaf, "addressable_shards", None)
+            if shards is None:           # eval_shape struct: global bytes
+                return self.kv_bytes()
+            for s in shards:
+                per[s.device] = per.get(s.device, 0) + s.data.nbytes
+        return max(per.values()) if per else 0
 
     def dense_logical_bytes(self) -> int:
         """Bytes of the dense LOGICAL kv view — what a ``merged()``-based
@@ -259,7 +348,7 @@ class DecodeState:
                                     dense_row, self.axes,
                                     page_mask=page_write_mask,
                                     exclude=exclude)
-        return DecodeState(kv, bk, self.axes, self.layout)
+        return self._pinned(kv, bk)
 
     def read_slot(self, slot: jax.Array) -> Dict[str, Any]:
         """Dense logical kv row (batch size 1) of slot ``slot``, read
@@ -282,7 +371,7 @@ class DecodeState:
         kv = self.layout.write_span(self.kv, self.bookkeeping, slot, fields,
                                     length_axes, self.axes, start,
                                     min_page=min_page)
-        return DecodeState(kv, self.bookkeeping, self.axes, self.layout)
+        return self._pinned(kv, self.bookkeeping)
 
     def where_rows(self, rows: jax.Array, other: "DecodeState"
                    ) -> "DecodeState":
@@ -294,7 +383,7 @@ class DecodeState:
               for name, leaf in self.bookkeeping.items()}
         kv = self.layout.where_rows(rows, self.kv, other.kv,
                                     self.bookkeeping, self.axes)
-        return DecodeState(kv, bk, self.axes, self.layout)
+        return self._pinned(kv, bk)
 
     # -- slot snapshot / restore (session tiering) --------------------------
     def snapshot_slot(self, slot: jax.Array) -> Dict[str, Dict[str, Any]]:
@@ -331,7 +420,7 @@ class DecodeState:
                 axis=self.axes[name])
         kv = self.layout.restore_slot(self.kv, self.bookkeeping, self.axes,
                                       slot, snap["kv"])
-        return DecodeState(kv, bk, self.axes, self.layout)
+        return self._pinned(kv, bk)
 
 
 # ---------------------------------------------------------------------------
@@ -685,6 +774,15 @@ class DecodeAPI:
     _AXES: Dict[str, int] = {}
     _LENGTH_AXES: Dict[str, int] = {}
     _QUANT_FIELDS: Tuple[str, ...] = ()
+    mesh: Optional[SH.MeshContext] = None
+
+    def _mesh_scope(self):
+        """Trace-time decode-mesh scope: the per-family step/sync/chunk
+        bodies trace inside it, so the kernel dispatch in
+        :mod:`repro.kernels.ops` sees the mesh and shard_map-wraps the
+        decode / prefill-chunk attention.  mesh=None is a no-op."""
+        from repro.kernels import ops
+        return ops.decode_mesh_scope(self.mesh)
 
     def _bind(self, slots: int, max_len: int):
         return LT.bind_layout(self.layout, slots=slots, max_len=max_len,
@@ -695,13 +793,13 @@ class DecodeAPI:
     def _wrap_new(self, cache: Dict[str, Any], max_len: int) -> DecodeState:
         layout = self._bind(cache["done"].shape[0], max_len)
         return DecodeState.from_dense(cache, self._KV_KEYS, self._AXES,
-                                      layout)
+                                      layout).with_mesh(self.mesh)
 
     def _rewrap(self, state: DecodeState, cache: Dict[str, Any]
                 ) -> DecodeState:
-        return DecodeState.from_dense(cache, self._KV_KEYS, self._AXES,
-                                      state.layout,
-                                      layout_bk=state.layout_bookkeeping())
+        return DecodeState.from_dense(
+            cache, self._KV_KEYS, self._AXES, state.layout,
+            layout_bk=state.layout_bookkeeping()).with_mesh(self.mesh)
 
     def _row_state(self, cache: Dict[str, Any]) -> DecodeState:
         """Wrap a batch-1 prefilled row (always dense — the batched
@@ -730,21 +828,36 @@ class DecodeAPI:
 _CHUNK_JITS: Dict[Any, Dict[str, Any]] = {}
 
 
+def _mesh_scoped(decode: "DecodeAPI", fn):
+    """Run ``fn``'s trace inside the decode-mesh scope (see
+    ``DecodeAPI._mesh_scope``); identity when the decode has no mesh."""
+    if decode.mesh is None:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with decode._mesh_scope():
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def _chunked_jits(decode: "DecodeAPI") -> Dict[str, Any]:
     # the fns are chunk-size-agnostic (the size arrives via call-time
     # shapes), so normalise prefill_chunk out of the key: an Engine and
     # a scheduler that differ only in the default knob share one set
+    # (the key keeps the mesh: a sharded decode compiles its own set)
     key = dataclasses.replace(decode, prefill_chunk=None)
     fns = _CHUNK_JITS.get(key)
     if fns is None:
         if hasattr(key, "_chunk_bucketed"):
-            fns = {"bucketed": jax.jit(key._chunk_bucketed)}
+            fns = {"bucketed": jax.jit(_mesh_scoped(key,
+                                                    key._chunk_bucketed))}
         else:
             fns = {
                 "seed": jax.jit(key._chunk_seed_row,
                                 static_argnums=(2,)),
                 "gather": jax.jit(key._chunk_gather_resident),
-                "chunk": jax.jit(key._chunk_fn),
+                "chunk": jax.jit(_mesh_scoped(key, key._chunk_fn)),
                 "span": jax.jit(key._chunk_span_write),
                 "finalize": jax.jit(key._chunk_finalize),
             }
@@ -775,6 +888,7 @@ class TConstDecode(DecodeAPI):
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
     prefill_chunk: Optional[int] = None
+    mesh: Optional[SH.MeshContext] = None
 
     _KV_KEYS = TC.KV_KEYS
     _AXES = TC.CACHE_BATCH_AXES
@@ -870,8 +984,10 @@ class TConstDecode(DecodeAPI):
                               np.logical_not(done))
 
     def raw_step(self, params, state, token):
-        logits, out = TC.decode_step_views(params, state.decode_views(),
-                                           token, self.cfg, mode=self.mode)
+        with self._mesh_scope():
+            logits, out = TC.decode_step_views(params, state.decode_views(),
+                                               token, self.cfg,
+                                               mode=self.mode)
         return logits, state.absorb(out)
 
     def sync_mask(self, state):
@@ -902,8 +1018,7 @@ class TConstDecode(DecodeAPI):
                         vals = where_rows(sel, v.astype(bk[f].dtype), old,
                                           axes[f])
                         out_bk[f] = put_rows(bk[f], idx, vals, axes[f])
-                return DecodeState(LT.absorb_views(views), out_bk,
-                                   state.axes, state.layout)
+                return state._pinned(LT.absorb_views(views), out_bk)
             return branch
 
         return TC.compacted_rows_switch(rows, state, factory)
@@ -919,6 +1034,7 @@ class DenseDecode(DecodeAPI):
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
     prefill_chunk: Optional[int] = None
+    mesh: Optional[SH.MeshContext] = None
 
     _KV_KEYS = LM.KV_KEYS
     _AXES = LM.CACHE_BATCH_AXES
@@ -958,8 +1074,10 @@ class DenseDecode(DecodeAPI):
                                           page_write_mask=page_write_mask)
 
     def raw_step(self, params, state, token):
-        logits, out = LM.lm_decode_step_views(params, state.decode_views(),
-                                              token, self.cfg)
+        with self._mesh_scope():
+            logits, out = LM.lm_decode_step_views(params,
+                                                  state.decode_views(),
+                                                  token, self.cfg)
         return logits, state.absorb(out)
 
     # chunked admission hooks (generic driver in DecodeAPI) -----------------
@@ -996,6 +1114,7 @@ class EncDecDecode(DecodeAPI):
     cfg: ModelConfig
     layout: LT.LayoutSpec = LT.DENSE_SPEC
     prefill_chunk: Optional[int] = None
+    mesh: Optional[SH.MeshContext] = None
 
     _KV_KEYS = ED.KV_KEYS
     _AXES = ED.CACHE_BATCH_AXES
@@ -1027,9 +1146,10 @@ class EncDecDecode(DecodeAPI):
                                           page_write_mask=page_write_mask)
 
     def raw_step(self, params, state, token):
-        logits, out = ED.encdec_decode_step_views(params,
-                                                  state.decode_views(),
-                                                  token, self.cfg)
+        with self._mesh_scope():
+            logits, out = ED.encdec_decode_step_views(params,
+                                                      state.decode_views(),
+                                                      token, self.cfg)
         return logits, state.absorb(out)
 
     # chunked admission hooks: the encoder runs ONCE at seed time (fixed
@@ -1056,21 +1176,37 @@ class EncDecDecode(DecodeAPI):
 
 
 def build_decode(cfg: ModelConfig, layout: Any = None,
-                 prefill_chunk: Optional[int] = None) -> DecodeAPI:
+                 prefill_chunk: Optional[int] = None,
+                 mesh: Any = None) -> DecodeAPI:
     """Build the decode protocol for ``cfg`` with a cache layout chosen
     by ``layout`` ("dense" | "paged" | "int8" | "paged_int8" |
     LayoutSpec | None).  ``prefill_chunk`` is the default chunk size for
     chunked KV-conditioned admission (None = one-shot full-prompt
-    prefill); the scheduler reads it unless given its own."""
+    prefill); the scheduler reads it unless given its own.  ``mesh``
+    (None | jax Mesh | MeshContext) makes the decode mesh-native:
+    ``init_state`` places its output with ``jax.device_put`` onto the
+    per-field decode shardings (see
+    :func:`repro.sharding.rules.decode_shardings`), every state-surgery
+    path re-pins its results, and the decode / prefill-chunk attention
+    runs shard_map-sharded over the model axis."""
     spec = LT.as_spec(layout)
     if prefill_chunk is not None and prefill_chunk < 1:
         raise ValueError("prefill_chunk must be positive (or None for "
                          "one-shot admission)")
+    ctx = SH.as_mesh_context(mesh)
+    if ctx is not None and cfg.n_kv_heads > 1 and \
+            cfg.n_kv_heads % ctx.model_shards != 0:
+        # MQA (n_kv_heads == 1) is exempt: its KV replicates over model
+        # (nothing to split); a >1 indivisible head count is a
+        # mis-sized mesh
+        raise ValueError(
+            f"model axis ({ctx.model_shards}) must divide the KV heads "
+            f"({cfg.n_kv_heads}) for head-sharded decode")
     if _is_tconst(cfg):
-        return TConstDecode(cfg, spec, prefill_chunk)
+        return TConstDecode(cfg, spec, prefill_chunk, ctx)
     if cfg.is_encdec:
-        return EncDecDecode(cfg, spec, prefill_chunk)
-    return DenseDecode(cfg, spec, prefill_chunk)
+        return EncDecDecode(cfg, spec, prefill_chunk, ctx)
+    return DenseDecode(cfg, spec, prefill_chunk, ctx)
 
 
 # ---------------------------------------------------------------------------

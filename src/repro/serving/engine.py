@@ -85,14 +85,16 @@ class Engine:
     def __init__(self, api: ModelAPI, params: Any, max_len: int,
                  sample_temperature: float = 0.0, seed: int = 0,
                  layout: Optional[Any] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 mesh: Optional[Any] = None):
         self.api = api
         # prefill_chunk rides on the decode protocol: the Engine's own
         # uniform-batch prefill is one fixed-shape dispatch already, but
         # a SlotScheduler built from this engine's decode inherits the
-        # chunked-admission default.
+        # chunked-admission default.  mesh (a jax Mesh or MeshContext)
+        # makes the SAME decode path run sharded — see docs/sharding.md.
         self.decode = build_decode(api.cfg, layout,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk, mesh=mesh)
         self.params = params
         self.max_len = max_len
         self.temperature = sample_temperature

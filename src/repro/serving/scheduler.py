@@ -292,12 +292,26 @@ class SlotScheduler:
         return int(self.active.sum())
 
     def kv_bytes(self) -> int:
+        """GLOBAL physical KV bytes — under a sharded pool this is the
+        whole-fleet figure, not one shard's buffer (sharded jax Arrays
+        report global shapes; regression-tested in
+        ``tests/test_sharded_decode.py``)."""
         return self.state.kv_bytes()
 
     def assigned_kv_bytes(self) -> int:
         """KV bytes the live page tables reference — a prefix-shared
-        page is counted once (see ``DecodeState.assigned_kv_bytes``)."""
+        page is counted once (see ``DecodeState.assigned_kv_bytes``).
+        GLOBAL bytes under a sharded pool, identical to the 1-device
+        run; telemetry pool-occupancy shares the same guarantee (its
+        free/total page counts come from the host-side allocator, which
+        tracks logical — global — pages)."""
         return self.state.assigned_kv_bytes()
+
+    def per_device_kv_bytes(self) -> int:
+        """Largest per-device share of the physical KV buffers —
+        ≈ ``kv_bytes() / model_shards`` for the head-sharded decode
+        layout, equal to ``kv_bytes()`` unmeshed."""
+        return self.state.per_device_kv_bytes()
 
     def page_refcounts(self) -> np.ndarray:
         """Host-side per-page refcounts (copy); all zeros when idle."""

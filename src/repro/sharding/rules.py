@@ -20,11 +20,15 @@ extra leading layer dims, detected as rank - base_rank.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+import dataclasses
+import logging
+from typing import Any, Dict, Optional, Sequence, Set, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger("repro.sharding")
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -149,6 +153,35 @@ def batch_shardings(specs: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
 # Serve caches
 # ---------------------------------------------------------------------------
 
+# dense logical KV fields, laid out (..., B, S, KV, head_dim)
+_KV_FIELD_NAMES = ("k", "v", "dense_k", "dense_v", "cross_k", "cross_v",
+                   "ctx_k", "ctx_v", "gen_k", "gen_v", "hist_k", "hist_v")
+
+# (batch, dsize) pairs already warned about — the replication fallback
+# silently costs a data-parallel factor, so it is logged ONCE per shape
+# (tests reset this set to re-arm the warning)
+_WARNED_BATCH_FALLBACK: Set[Tuple[int, int]] = set()
+
+
+def _batch_divisible(batch: int, mesh: Mesh, *, warn: bool = True) -> bool:
+    """True when the cache batch/slot dim can shard over the data axes.
+    When it cannot (and the mesh actually has data parallelism), warn
+    once per (batch, data-size): the fallback is replication, which is
+    correct but silently forfeits a ``dsize``x memory/compute split."""
+    dsize = _axis_size(mesh, data_axes(mesh))
+    ok = batch % dsize == 0 and batch >= dsize
+    if not ok and dsize > 1 and warn:
+        key = (batch, dsize)
+        if key not in _WARNED_BATCH_FALLBACK:
+            _WARNED_BATCH_FALLBACK.add(key)
+            logger.warning(
+                "cache batch/slot dim %d is not divisible by the data-axis "
+                "size %d; falling back to replication over the data axes "
+                "(seq-dim sharding only where divisible) — pick slots as a "
+                "multiple of the data axes to regain the split",
+                batch, dsize)
+    return ok
+
 
 def _cache_spec(path, leaf, mesh: Mesh, batch: int) -> P:
     name = _leaf_name(path)
@@ -159,7 +192,7 @@ def _cache_spec(path, leaf, mesh: Mesh, batch: int) -> P:
     shape = leaf.shape
     rank = leaf.ndim
     spec: list = [None] * rank
-    b_ok = batch % dsize == 0 and batch >= dsize
+    b_ok = _batch_divisible(batch, mesh)
 
     # locate the batch dim: the first dim equal to `batch`
     b_dim = next((i for i, s in enumerate(shape) if s == batch), None)
@@ -176,8 +209,7 @@ def _cache_spec(path, leaf, mesh: Mesh, batch: int) -> P:
         if b_ok and b_dim is not None:
             spec[b_dim] = dspec
         return P(*spec)
-    if name in ("k", "v", "dense_k", "dense_v", "cross_k", "cross_v",
-                "ctx_k", "ctx_v", "gen_k", "gen_v", "hist_k", "hist_v"):
+    if name in _KV_FIELD_NAMES:
         # layout (..., B, S, KV, hd)
         s_dim, kv_dim, hd_dim = rank - 3, rank - 2, rank - 1
         b_dim = rank - 4
@@ -253,6 +285,144 @@ def opt_shardings(param_sh: Any, opt_shapes: Any, mesh: Mesh,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding (mesh-native serving)
+#
+# Per-field policy for BOTH DecodeState partitions (kv + bookkeeping):
+#
+# * dense / int8 KV buffers (..., B, S, KV, hd): slot dim over the data
+#   axes (when divisible — the warn-once fallback above applies), KV-head
+#   dim over ``model``; int8 ``__scale`` pools ride their parent ``__q``
+#   spec with the trailing size-1 dim always replicated.
+# * paged pools (..., pool_pages+1, page, KV, hd): KV-head dim over
+#   ``model``; the page axis is REPLICATED over data — any slot may own
+#   any page under the host-side allocator (prefix sharing, CoW forks),
+#   so a data-sharded pool would need a shard-local allocator (the
+#   disaggregated-serving follow-up, see docs/sharding.md).  Per-device
+#   KV bytes are therefore global / model_shards.
+# * page tables and all ``layout__*`` bookkeeping: replicated (tiny
+#   int32 — every shard walks the same table).
+# * plain bookkeeping (tokens, lengths, done, phase counters): slot dim
+#   over data when divisible, else replicated.
+# ---------------------------------------------------------------------------
+
+_LAYOUT_BK_PREFIX = "layout__"          # mirrors repro.models.layouts
+
+
+def decode_field_spec(name: str, shape: Tuple[int, ...], mesh: Mesh, *,
+                      batch: int, baxis: Optional[int] = None,
+                      pool_axis: Optional[int] = None) -> P:
+    """PartitionSpec for one physical DecodeState field.
+
+    ``baxis`` is the field's batch ("slot") axis (None for fields with
+    no slot dim, e.g. shared paged pools); ``pool_axis`` is the pool
+    page axis for paged fields (None otherwise).  Pure shape/name
+    computation — usable with any object exposing ``.shape`` /
+    ``.axis_names`` (tests use a fake mesh)."""
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dspec = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    rank = len(shape)
+    spec: list = [None] * rank
+
+    if name.startswith(_LAYOUT_BK_PREFIX):
+        return P()                       # page tables et al: replicated
+    is_scale = name.endswith("__scale")
+    base = name[:-len("__scale")] if is_scale else \
+        (name[:-len("__q")] if name.endswith("__q") else name)
+
+    def _model_dim(*dims: int) -> None:
+        for d in dims:
+            if is_scale and shape[d] == 1:
+                continue                 # scale's trailing 1: replicated
+            if msize > 1 and shape[d] % msize == 0 and shape[d] >= msize:
+                spec[d] = "model"
+                return
+
+    if pool_axis is not None:
+        # shared paged pool: (..., pool_pages+1, page, KV, hd) — KV-head
+        # dim only: a head-dim split would change the QK/AV contraction
+        # order (MQA pools replicate over model instead)
+        _model_dim(rank - 2)
+        return P(*spec)
+    if baxis is not None and dspec is not None \
+            and _batch_divisible(batch, mesh):
+        spec[baxis] = dspec
+    if base in _KV_FIELD_NAMES:
+        # KV-head dim ONLY: splitting head_dim instead would split the
+        # QK/AV contractions (collectives + a different f32 reduction
+        # order — greedy streams could flip).  MQA (KV=1) replicates
+        # over model; the data axis still splits slots.
+        _model_dim(rank - 2)
+    elif base == "ssm" and baxis is not None and rank - baxis >= 3:
+        _model_dim(baxis + 1, baxis + 2)  # (.., B, H, P, N): heads, state
+    elif base == "conv" and baxis is not None and rank >= 2:
+        _model_dim(rank - 1)             # (.., B, K-1, C): channels
+    return P(*spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Hashable decode-mesh handle carried in DecodeState pytree aux data
+    and on the (frozen) DecodeAPI dataclasses.
+
+    Holds only the mesh: per-field specs are a pure function of (name,
+    shape, mesh) via :func:`decode_field_spec`, so the context never goes
+    stale when slots / max_len / layout change."""
+
+    mesh: Mesh
+
+    @property
+    def data_shards(self) -> int:
+        return _axis_size(self.mesh, data_axes(self.mesh))
+
+    @property
+    def model_shards(self) -> int:
+        return self.mesh.shape["model"] \
+            if "model" in self.mesh.axis_names else 1
+
+    def spec(self, name: str, shape, *, batch: int,
+             baxis: Optional[int] = None,
+             pool_axis: Optional[int] = None) -> P:
+        return decode_field_spec(name, tuple(shape), self.mesh, batch=batch,
+                                 baxis=baxis, pool_axis=pool_axis)
+
+    def sharding(self, name: str, shape, *, batch: int,
+                 baxis: Optional[int] = None,
+                 pool_axis: Optional[int] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(
+            name, shape, batch=batch, baxis=baxis, pool_axis=pool_axis))
+
+    def apply(self, x, sharding: NamedSharding):
+        """Pin ``x`` to ``sharding``: a sharding constraint under
+        tracing (state surgery inside jit preserves shardings instead of
+        silently gathering), ``jax.device_put`` on concrete arrays
+        (initial placement)."""
+        if isinstance(x, jax.core.Tracer):
+            return jax.lax.with_sharding_constraint(x, sharding)
+        return jax.device_put(x, sharding)
+
+
+def as_mesh_context(mesh) -> Optional[MeshContext]:
+    """Normalise None | Mesh | MeshContext to Optional[MeshContext]."""
+    if mesh is None or isinstance(mesh, MeshContext):
+        return mesh
+    return MeshContext(mesh)
+
+
+def decode_shardings(cfg, mesh: Mesh, layout: Any = None, *,
+                     slots: int, max_len: int):
+    """Per-field NamedShardings for both DecodeState partitions of
+    ``build_decode(cfg, layout)`` at (slots, max_len) — a DecodeState-
+    structured pytree of NamedSharding (usable directly as jit
+    in/out_shardings).  No device allocation (eval_shape)."""
+    from repro.models.api import build_decode     # circular-free at call
+    decode = build_decode(cfg, layout)
+    state = jax.eval_shape(lambda: decode.init_state(slots, max_len))
+    return state.field_shardings(MeshContext(mesh))
 
 
 # ---------------------------------------------------------------------------

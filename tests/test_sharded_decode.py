@@ -1,0 +1,207 @@
+"""Mesh-native decode (PR 9): the SAME decode path on a (data, model)
+device mesh.
+
+Everything except the argparse validation needs 8 devices — CI's
+``sharded-cpu`` job provides them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; under the plain
+tier-1 run these tests skip (the conftest deliberately keeps the single
+real CPU device).
+
+* **stream identity** — greedy decode on a 2x4 mesh is token-identical
+  to the 1-device run across {tconst, tlin, lm, encdec} x
+  {dense, paged, paged_int8} (the acceptance bar: sharding is a
+  placement decision, never a numerics one);
+* **no pool all-gather** — the compiled sharded step never gathers a
+  KV pool: head-sharded QK/AV runs on local head slices (shard_map),
+  so any all-gather in the HLO is bookkeeping-sized;
+* **byte accounting** — ``kv_bytes``/``assigned_kv_bytes`` report
+  GLOBAL bytes (identical meshed vs unmeshed — the satellite
+  regression), ``per_device_kv_bytes`` reports the largest shard
+  (global / 8 when everything splits);
+* **serve --mesh validation** — bad geometries die in argparse, not in
+  a shape crash.
+"""
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.launch.mesh import make_decode_mesh
+from repro.models.api import build_decode
+from repro.models.layouts import LayoutSpec
+from repro.serving.engine import Engine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+
+requires_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+B, L, GEN, MAX_LEN, PAGE = 2, 16, 6, 64, 16
+
+_CONFIGS = {
+    "tconst": ("tconst_41m", {}),
+    "tlin": ("tconst_41m", {"attention_mode": "tlin"}),
+    "lm": ("smollm_360m", {}),
+    "encdec": ("whisper_small", {}),
+}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices")
+    return make_decode_mesh(2, 4)
+
+
+@pytest.fixture(scope="module")
+def setups():
+    from repro.models.api import build_model
+    out = {}
+    for fam, (name, kw) in _CONFIGS.items():
+        cfg = reduced(get_config(name), dtype="float32", **kw)
+        api = build_model(cfg)
+        out[fam] = (cfg, api, api.init(jax.random.PRNGKey(0)))
+    return out
+
+
+def _spec(kind):
+    return None if kind == "dense" else LayoutSpec(kind=kind,
+                                                   page_size=PAGE)
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.ones((B, L), jnp.int32)}
+    if cfg.is_encdec:
+        batch["audio_feats"] = jnp.zeros(
+            (B, cfg.encoder_seq, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+def _replicated(params, mesh):
+    return jax.device_put(params, jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec()))
+
+
+# ---------------------------------------------------------------------------
+# stream identity: {family} x {layout}, meshed vs 1 device
+# ---------------------------------------------------------------------------
+
+
+@requires_mesh
+@pytest.mark.parametrize("kind", ["dense", "paged", "paged_int8"])
+@pytest.mark.parametrize("family", ["tconst", "tlin", "lm", "encdec"])
+def test_stream_identical_to_1device(family, kind, mesh, setups):
+    cfg, api, params = setups[family]
+    batch = _batch(cfg)
+    ref = Engine(api, params, max_len=MAX_LEN,
+                 layout=_spec(kind)).generate(batch, GEN)
+    out = Engine(api, _replicated(params, mesh), max_len=MAX_LEN,
+                 layout=_spec(kind), mesh=mesh).generate(batch, GEN)
+    np.testing.assert_array_equal(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# compiled step: no KV-pool all-gather
+# ---------------------------------------------------------------------------
+
+
+@requires_mesh
+def test_sharded_paged_step_has_no_pool_allgather(mesh, setups):
+    """Head-sharded attention runs on local head slices — the only
+    all-gathers a sharded paged step may contain are bookkeeping-sized
+    (page tables, per-slot lengths), orders of magnitude below the
+    pool.  A pool gather would defeat the entire memory split."""
+    cfg, api, params = setups["tlin"]
+    decode = build_decode(cfg, _spec("paged"), mesh=mesh)
+    params = _replicated(params, mesh)
+    _, state = jax.jit(lambda p, b: decode.prefill(p, b, MAX_LEN))(
+        params, _batch(cfg))
+    token = jnp.ones((B,), jnp.int32)
+    hlo = jax.jit(decode.raw_step).lower(params, state, token) \
+        .compile().as_text()
+    pool_elems = min(int(np.prod(leaf.shape))
+                     for leaf in jax.tree_util.tree_leaves(state.kv)
+                     if leaf.ndim >= 4 and leaf.size > 10_000)
+    for line in hlo.splitlines():
+        if "all-gather(" not in line and "all-gather-start(" not in line:
+            continue
+        shapes = re.findall(r"\w+\[([\d,]+)\]",
+                            line.split("all-gather")[0])
+        for dims in shapes:
+            elems = int(np.prod([int(d) for d in dims.split(",")]))
+            assert elems < pool_elems / 8, \
+                f"pool-sized all-gather in the sharded step: {line.strip()}"
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: global vs per-device (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+@requires_mesh
+def test_kv_bytes_global_and_per_device(mesh, setups):
+    cfg, api, params = setups["tconst"]
+    ref = build_decode(cfg).init_state(B, MAX_LEN)
+    state = build_decode(cfg, mesh=mesh).init_state(B, MAX_LEN)
+    # GLOBAL bytes are placement-invariant
+    assert state.kv_bytes() == ref.kv_bytes()
+    assert state.assigned_kv_bytes() == ref.assigned_kv_bytes()
+    # tconst dense KV splits fully: slots over data (2) x heads over
+    # model (4) -> each device holds 1/8th
+    assert state.kv_bytes() == 8 * state.per_device_kv_bytes()
+    # unmeshed: per-device IS global
+    assert ref.per_device_kv_bytes() == ref.kv_bytes()
+
+
+@requires_mesh
+def test_scheduler_reports_global_bytes_meshed(mesh, setups):
+    """assigned_kv_bytes through the scheduler: identical meshed vs
+    unmeshed after the same admissions (a sharded pool must not report
+    one shard's buffer)."""
+    cfg, api, params = setups["tlin"]
+    prompt = np.arange(1, 18, dtype=np.int32)
+
+    def admit(mesh_arg, p):
+        sched = SlotScheduler(
+            build_decode(cfg, _spec("paged"), mesh=mesh_arg), p,
+            slots=2, max_len=MAX_LEN, chunk_size=4)
+        sched.submit(Session(prompt.copy(), max_new_tokens=4))
+        sched.admit_pending()
+        return sched
+
+    ref = admit(None, params)
+    meshed = admit(mesh, _replicated(params, mesh))
+    assert meshed.assigned_kv_bytes() == ref.assigned_kv_bytes() > 0
+    assert meshed.kv_bytes() == ref.kv_bytes()
+    assert meshed.per_device_kv_bytes() < meshed.kv_bytes()
+
+
+# ---------------------------------------------------------------------------
+# serve --mesh validation (no mesh entry needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mesh_arg", ["bogus", "2x", "0x4", "3x5"])
+def test_serve_mesh_validation_dies_in_argparse(mesh_arg, capsys):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as exc:
+        serve.main(["--arch", "tconst-41m", "--reduced",
+                    "--mesh", mesh_arg])
+    assert exc.value.code == 2            # argparse error, not a crash
+    err = capsys.readouterr().err
+    assert "--mesh" in err
+
+
+@requires_mesh
+def test_serve_mesh_rejects_indivisible_kv_heads(capsys):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as exc:
+        serve.main(["--arch", "tconst-41m", "--reduced", "--mesh", "1x8"])
+    assert exc.value.code == 2
+    assert "KV heads" in capsys.readouterr().err

@@ -1,0 +1,191 @@
+"""Decode-state sharding rules (mesh-native serving, PR 9).
+
+Covers the pure spec computation — no device mesh needed:
+
+* the batch-indivisible replication fallback WARNS exactly once per
+  (batch, data-size) shape, and the divisible branch stays silent
+  (the satellite bugfix: it used to fall back silently);
+* ``decode_field_spec``'s per-field policy table: layout bookkeeping
+  replicated, paged pools head-sharded with the page axis replicated,
+  int8 scales riding the parent spec with the trailing 1 replicated,
+  dense KV slot+head sharded, head-dim fallback when KV heads don't
+  divide;
+* ``MeshContext`` hashability (it keys jit caches via DecodeState aux)
+  and ``build_decode``'s KV-head divisibility validation;
+* ``decode_shardings`` returns a DecodeState-structured pytree of
+  NamedSharding on a real (1-device) mesh.
+"""
+import logging
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import get_config, reduced
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Just enough Mesh surface for the rule functions."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    def __repr__(self):
+        return f"FakeMesh({self.shape})"
+
+
+MESH = FakeMesh({"data": 2, "model": 4})
+
+
+@pytest.fixture(autouse=True)
+def _rearm_warning():
+    rules._WARNED_BATCH_FALLBACK.clear()
+    yield
+    rules._WARNED_BATCH_FALLBACK.clear()
+
+
+# ---------------------------------------------------------------------------
+# warn-once replication fallback (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_indivisible_batch_warns_once(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        assert rules._batch_divisible(3, MESH) is False
+        assert rules._batch_divisible(3, MESH) is False   # same shape again
+    warns = [r for r in caplog.records if "falling back to replication"
+             in r.message]
+    assert len(warns) == 1, "fallback must warn exactly once per shape"
+    assert "3" in warns[0].getMessage() and "2" in warns[0].getMessage()
+
+
+def test_distinct_shapes_warn_separately(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        rules._batch_divisible(3, MESH)
+        rules._batch_divisible(5, MESH)
+    assert sum("falling back" in r.message for r in caplog.records) == 2
+
+
+def test_divisible_batch_is_silent(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        assert rules._batch_divisible(4, MESH) is True
+        # batch smaller than the data axes is indivisible by definition
+        assert rules._batch_divisible(1, FakeMesh({"data": 1, "model": 4}),
+                                      ) is True   # dsize=1: trivially ok
+    assert not caplog.records
+
+
+def test_cache_spec_covers_both_branches(caplog):
+    """The _cache_spec integration: divisible batch shards the slot dim,
+    indivisible replicates it (and warns through the same choke point)."""
+    kv = jax.ShapeDtypeStruct((4, 64, 8, 16), np.float32)
+    (path, leaf), = jax.tree_util.tree_flatten_with_path({"k": kv})[0]
+    with caplog.at_level(logging.WARNING, logger="repro.sharding"):
+        assert rules._cache_spec(path, leaf, MESH, batch=4) == \
+            P("data", None, "model", None)
+        assert not caplog.records
+        kv3 = jax.ShapeDtypeStruct((3, 64, 8, 16), np.float32)
+        (path3, leaf3), = jax.tree_util.tree_flatten_with_path(
+            {"k": kv3})[0]
+        spec = rules._cache_spec(path3, leaf3, MESH, batch=3)
+    assert spec == P(None, "data", "model", None)   # seq-dim fallback
+    assert sum("falling back" in r.message for r in caplog.records) == 1
+
+
+# ---------------------------------------------------------------------------
+# decode_field_spec policy table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,shape,kw,want", [
+    # layout bookkeeping (page tables, counters): replicated
+    ("layout__pages", (4, 12), dict(batch=4, baxis=0), P()),
+    # shared paged pool: KV heads over model, page axis REPLICATED
+    ("hist_k", (41, 8, 8, 16), dict(batch=4, pool_axis=0),
+     P(None, None, "model", None)),
+    # int8 pool rides the parent spec; trailing size-1 scale replicated
+    ("hist_k__q", (41, 8, 8, 16), dict(batch=4, pool_axis=0),
+     P(None, None, "model", None)),
+    ("hist_k__scale", (41, 8, 8, 1), dict(batch=4, pool_axis=0),
+     P(None, None, "model", None)),
+    # dense KV: slot dim over data + KV heads over model
+    ("k", (4, 128, 8, 16), dict(batch=4, baxis=0),
+     P("data", None, "model", None)),
+    # KV heads indivisible by model=4 -> KV replicates over model (no
+    # head-dim fallback: that would split the QK/AV contractions)
+    ("k", (4, 128, 2, 16), dict(batch=4, baxis=0),
+     P("data", None, None, None)),
+    # MQA (1 KV head): same — replicated over model, data split only
+    ("k", (4, 128, 1, 16), dict(batch=4, baxis=0),
+     P("data", None, None, None)),
+    # indivisible slot dim -> replicated batch, heads still sharded
+    ("k", (3, 128, 8, 16), dict(batch=3, baxis=0),
+     P(None, None, "model", None)),
+    # plain bookkeeping: slot dim over data only
+    ("tokens", (4, 128), dict(batch=4, baxis=0), P("data", None)),
+    ("len", (4,), dict(batch=4, baxis=0), P("data")),
+    # no slot dim (shared field): fully replicated
+    ("step", (2,), dict(batch=4), P(None)),
+])
+def test_decode_field_spec_table(name, shape, kw, want):
+    assert rules.decode_field_spec(name, shape, MESH, **kw) == want
+
+
+def test_decode_field_spec_divides(caplog):
+    """Every sharded dim divides evenly by its axis size — the invariant
+    behind 'same path, just placed'."""
+    for name, shape, kw in [
+        ("k", (8, 96, 4, 32), dict(batch=8, baxis=0)),
+        ("hist_v", (17, 8, 4, 32), dict(batch=8, pool_axis=0)),
+        ("ssm", (2, 8, 4, 16, 8), dict(batch=8, baxis=1)),
+        ("conv", (2, 8, 3, 64), dict(batch=8, baxis=1)),
+    ]:
+        spec = rules.decode_field_spec(name, shape, MESH, **kw)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert shape[dim] % size == 0, (name, shape, spec)
+
+
+# ---------------------------------------------------------------------------
+# MeshContext / decode_shardings on a real mesh
+# ---------------------------------------------------------------------------
+
+
+def _one_device_mesh():
+    grid = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def test_mesh_context_hashable_and_normalised():
+    mesh = _one_device_mesh()
+    ctx = rules.as_mesh_context(mesh)
+    assert isinstance(ctx, rules.MeshContext)
+    assert rules.as_mesh_context(ctx) is ctx
+    assert rules.as_mesh_context(None) is None
+    assert hash(ctx) == hash(rules.MeshContext(mesh))
+    assert ctx == rules.MeshContext(mesh)
+    assert ctx.data_shards == 1 and ctx.model_shards == 1
+
+
+def test_build_decode_rejects_indivisible_model_axis():
+    from repro.models.api import build_decode
+    cfg = reduced(get_config("tconst_41m"), dtype="float32")
+    assert cfg.n_kv_heads % 3 != 0
+    with pytest.raises(ValueError, match="model axis"):
+        build_decode(cfg, mesh=FakeMesh({"data": 1, "model": 3}))
+
+
+def test_decode_shardings_structure():
+    cfg = reduced(get_config("tconst_41m"), dtype="float32")
+    mesh = _one_device_mesh()
+    sh = rules.decode_shardings(cfg, mesh, slots=2, max_len=64)
+    leaves = jax.tree_util.tree_leaves(sh)
+    assert leaves and all(isinstance(s, NamedSharding) for s in leaves)
+    # size-1 axes: every sharding is (trivially) a single-device
+    # placement, so jit could take these as in_shardings verbatim
+    assert all(s.num_devices == 1 for s in leaves)
