@@ -692,6 +692,105 @@ def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
     return logits, _undense_views(out)
 
 
+def verify_chunk_views(params: Params, cache: Dict[str, Any],
+                       feed: jax.Array, cfg: ModelConfig,
+                       mode: str = "tconst"
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Speculative VERIFY: score C fed tokens per slot against the
+    resident caches in ONE fixed-shape dispatch — the chunked analogue
+    of :func:`decode_step_views`, with the C-step python loop replaced
+    by :func:`repro.kernels.ops.prefill_chunk_attention` over the gen
+    window and C-query cross-attention over the frozen context KV.
+
+    feed: (B, C) int32 — position c is the token the sequential decode
+    WOULD feed at generation offset ``gen_len + c`` (the previous
+    sample, then the draft).  All C keys/values are written through the
+    views at gen slots ``gen_len + c`` (true-position RoPE), exactly
+    where the sequential steps would put them; writes past ``W_og``
+    fall off the scatter harmlessly and the caller's acceptance budget
+    (:meth:`TConstDecode.verify_budget`) never accepts past the window.
+
+    COUNTERS ARE NOT ADVANCED: acceptance of an m-token prefix is a
+    later ``gen_len += m`` (``advance_lengths``); rejected suffix
+    writes become stale garbage beyond ``gen_len``, masked by the
+    slot-causal attention here and overwritten before ever being
+    attended by the next round's writes at the same slots.
+
+    Returns (logits (B, C, V) — position c scores the token AFTER
+    ``feed[:, c]`` — and the updated cache, same view structure).
+    """
+    from repro.kernels import ops
+    tc = cfg.tconst
+    eps = cfg.norm_eps
+    B, C = feed.shape
+    dtype = jnp.dtype(cfg.dtype)
+
+    pos = cache["hist_len"] + cache["gen_len"]                   # (B,)
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # (B, C)
+    gpos = cache["gen_len"][:, None] + \
+        jnp.arange(C, dtype=jnp.int32)[None]                     # (B, C)
+    x = E.embed_tokens(params["embed"], feed, dtype)             # (B, C, D)
+    cos_q, sin_q = _rope(qpos, cfg)
+    nb = cfg.tconst_blocks
+    ctx_k, ctx_v = cache["ctx_k"], cache["ctx_v"]
+    use_tlin = mode == "tlin"
+    if use_tlin:
+        max_len = cache["tokens"].shape[1]
+        hist_valid = jnp.arange(max_len)[None] < \
+            cache["hist_len"][:, None]                           # (B, N)
+
+    def block_body(ib, carry):
+        x, gk, gv = carry
+        block = jax.tree_util.tree_map(lambda a: a[ib], params["blocks"])
+        ctx_kb, ctx_vb = ctx_k.layer(ib), ctx_v.layer(ib)
+        gkb, gvb = gk.layer(ib), gv.layer(ib)
+        for i in range(tc.h + 2):
+            li = block["layers"][i]
+            xn = rmsnorm(li["ln1"], x, eps)
+            q, k_new, v_new = A.qkv_proj(li["attn"], xn, xn, dtype)
+            q = R.apply_rope(q, cos_q, sin_q)
+            k_new = R.apply_rope(k_new, cos_q, sin_q)
+            gki, gvi = gkb.layer(i), gvb.layer(i)
+            for c in range(C):
+                gki = gki.write_token(cache["gen_len"] + c, k_new[:, c])
+                gvi = gvi.write_token(cache["gen_len"] + c, v_new[:, c])
+            gkb = gkb.set_layer(i, gki)
+            gvb = gvb.set_layer(i, gvi)
+            w_og = gki.dense().shape[1]
+            o = ops.prefill_chunk_attention(
+                q, gki.dense().astype(dtype), gvi.dense().astype(dtype),
+                gpos, jnp.arange(w_og, dtype=jnp.int32), 0,
+                cfg.logit_softcap)
+            out = A.out_proj(li["attn"], o, dtype)
+            if i >= 1:
+                out = out + A.verify_attend_view(
+                    li["attn"], xn, ctx_kb.layer(i - 1),
+                    ctx_vb.layer(i - 1), cache["ctx_valid"],
+                    cos_q, sin_q, cfg.logit_softcap)
+            elif use_tlin:
+                out = out + A.verify_attend_view(
+                    li["attn"], xn, cache["hist_k"].layer(ib),
+                    cache["hist_v"].layer(ib), hist_valid,
+                    cos_q, sin_q, cfg.logit_softcap)
+            x = x + out
+            f, _ = _ffn_apply(li, rmsnorm(li["ln2"], x, eps), cfg)
+            x = x + f
+        return x, gk.set_layer(ib, gkb), gv.set_layer(ib, gvb)
+
+    x, gk, gv = jax.lax.fori_loop(
+        0, nb, lambda i, c: block_body(i, c),
+        (x, cache["gen_k"], cache["gen_v"]))
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x, cfg.logit_softcap)   # (B, C, V)
+
+    cache = dict(cache)
+    cache["gen_k"], cache["gen_v"] = gk, gv
+    cache["tokens"] = cache["tokens"].at[
+        jnp.arange(B)[:, None], qpos].set(feed)
+    return logits, cache
+
+
 def _prefill_window_pass(params: Params, cache: Dict[str, Any],
                          win: jax.Array, gen_pos: jax.Array,
                          cfg: ModelConfig, mode: str

@@ -58,6 +58,17 @@ resume cycles and assigned-vs-spilled bytes)::
       --sessions 6 --slots 2 --gen 16 --layout paged --page-size 16 \\
       --spill-capacity-mb 64
 
+Speculative decoding (sessions mode): each scheduler tick drafts k
+tokens per slot (``--drafter ngram`` self-drafts from the session's own
+window; ``tconst`` runs a reduced small-W model), verifies them in ONE
+fixed-shape ``verify_chunk`` dispatch, and commits the verify-exact
+accepted prefix — streams stay token-identical to the non-speculative
+run (checked against solo generation below) while repeat-heavy text
+commits up to k+1 tokens per dispatch::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tconst-41m --reduced \\
+      --sessions 3 --slots 2 --gen 24 --speculate 4 --drafter ngram
+
 SLO-aware scheduling demo (``--workload`` replays a seeded traffic
 trace — poisson or bursty arrivals, length mixes, SLO slice — through
 the scheduler under a named policy and prints the telemetry summary;
@@ -131,6 +142,14 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
             ap.error(f"--prefill-chunk {args.prefill_chunk} must be a "
                      f"multiple of --page-size {args.page_size} — "
                      f"chunk-granular page writes cover whole pages")
+    if args.speculate < 0:
+        ap.error(f"--speculate {args.speculate} must be >= 0 (tokens "
+                 f"drafted per slot per tick; 0 disables speculation)")
+    if args.speculate and not args.sessions:
+        ap.error("--speculate rides the session scheduler's verify "
+                 "dispatch (the uniform batch path is greedy-Engine "
+                 "only — see Engine.generate_speculative) — add "
+                 "--sessions N")
     if args.workload and not args.sessions:
         ap.error("--workload replays a traffic trace through the session "
                  "scheduler (arrivals, SLOs, policies are admission-side "
@@ -185,13 +204,14 @@ def validate_layout_args(ap, cfg, args, max_len: int) -> None:
     # largest session this launcher will submit must be admissible
     worst_prompt = max(_session_prompt_lens(args)) if args.sessions \
         else args.prompt_len
-    worst_need = -(-(worst_prompt + args.gen + args.chunk)
+    headroom = max(args.chunk, args.speculate + 1)
+    worst_need = -(-(worst_prompt + args.gen + headroom)
                    // args.page_size)
     if worst_need > args.pool_pages:
         ap.error(
             f"--pool-pages {args.pool_pages} cannot admit the largest "
-            f"session: prompt {worst_prompt} + gen {args.gen} + chunk "
-            f"{args.chunk} needs {worst_need} pages of {args.page_size} "
+            f"session: prompt {worst_prompt} + gen {args.gen} + headroom "
+            f"{headroom} needs {worst_need} pages of {args.page_size} "
             f"tokens — raise --pool-pages to >= {worst_need} or shrink "
             f"the sessions")
 
@@ -261,7 +281,8 @@ def run_workload(cfg, api, params, args, max_len: int, mesh=None) -> int:
                           prefix_sharing=args.prefix_sharing,
                           tier_store=store,
                           preempt_chunks=1 if store is not None else None,
-                          policy=args.policy, telemetry=telemetry)
+                          policy=args.policy, telemetry=telemetry,
+                          speculate=args.speculate, drafter=args.drafter)
     # leave headroom for the longest output draw (32) + one chunk of
     # over-generation so every generated session is admissible
     arrivals = generate_workload(
@@ -319,13 +340,16 @@ def run_sessions(cfg, api, params, args, mesh=None) -> int:
     decode = build_decode(cfg, _layout_spec(args),
                           prefill_chunk=args.prefill_chunk or None,
                           mesh=mesh)
+    telemetry = ServingTelemetry() if args.speculate else None
     sched = SlotScheduler(decode, params, slots=args.slots,
                           max_len=args.max_len or
                           (max(len(p) for p in prompts) + args.gen + 64),
                           chunk_size=args.chunk, seed=args.seed,
                           prefix_sharing=args.prefix_sharing,
                           tier_store=store,
-                          preempt_chunks=1 if store is not None else None)
+                          preempt_chunks=1 if store is not None else None,
+                          speculate=args.speculate, drafter=args.drafter,
+                          telemetry=telemetry)
 
     def stream(sess, tok):
         print(f"[serve]   session {sess.sid}: token[{len(sess.tokens) - 1}]"
@@ -376,6 +400,17 @@ def run_sessions(cfg, api, params, args, mesh=None) -> int:
         print(f"[serve] decode chunks: n={len(chunks)} "
               f"({args.chunk} tokens/dispatch, zero per-token host syncs) "
               f"median={np.median(warm) * 1e3:.2f}ms")
+    if args.speculate and telemetry is not None:
+        spec = telemetry.summary()["spec_decode"]
+        if spec:
+            rounds = [s for s in sched.stats if s.kind == "spec_chunk"]
+            print(f"[serve] speculative ({args.drafter} drafter, "
+                  f"k={args.speculate}): {spec['rounds']} verify rounds, "
+                  f"acceptance {spec['acceptance_rate']:.2f} "
+                  f"({spec['accepted']}/{spec['drafted']} draft tokens), "
+                  f"{spec['tokens_per_round']:.2f} committed tokens per "
+                  f"{args.speculate + 1}-token verify dispatch "
+                  f"(n={len(rounds)} dispatches)")
     admits = [s.seconds for s in sched.admit_stats if not s.compiled]
     if admits:
         print(f"[serve] admissions: n={len(sched.admit_stats)} "
@@ -491,6 +526,19 @@ def main(argv=None) -> int:
                     help="TTFT deadline (in scheduler chunks from "
                          "submission) carried by the workload's SLO "
                          "slice")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative decoding (sessions mode): draft N "
+                         "tokens per slot per tick and verify them in "
+                         "one fixed-shape dispatch; streams stay token-"
+                         "identical to the non-speculative run "
+                         "(verify-exact acceptance); 0 disables")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=["ngram", "tconst"],
+                    help="draft proposer for --speculate: ngram = "
+                         "self-drafting from the session's own token "
+                         "window (zero model cost); tconst = a reduced "
+                         "small-W tconst model with its own O(1) decode "
+                         "state")
     ap.add_argument("--sessions", type=int, default=0,
                     help="serve N streaming sessions (staggered admission, "
                          "variable prompt lengths) instead of one batch")

@@ -290,6 +290,40 @@ def cross_attend_view(params: Params, x: jax.Array, k_view, v_view,
     return out_proj(params, o, dtype)
 
 
+def verify_attend_view(params: Params, x: jax.Array, k_view, v_view,
+                       kv_valid: Optional[jax.Array] = None,
+                       cos_q: Optional[jax.Array] = None,
+                       sin_q: Optional[jax.Array] = None,
+                       logit_softcap: float = 0.0,
+                       valid_len: Optional[jax.Array] = None,
+                       window: "int | jax.Array" = 0) -> jax.Array:
+    """Multi-query cross-attention over a KVView pair for speculative
+    VERIFY: x (B, C, d) — all C draft positions attend the resident KV
+    in one dispatch.  Unlike :func:`cross_attend_view` this never takes
+    the single-query paged / fused-int8 kernels (they are Lq=1 only);
+    every view kind is densified and scored through the masked-safe
+    :func:`sdpa`, with ``kv_valid`` (B, S) or a prefix ``valid_len``
+    bounding the readable slots exactly as the sequential step would.
+    """
+    from repro.layers.rope import apply_rope
+    dtype = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(dtype))
+    if cos_q is not None:
+        q = apply_rope(q, cos_q, sin_q)
+    k = k_view.dense().astype(dtype)
+    v = v_view.dense().astype(dtype)
+    if kv_valid is None and valid_len is not None:
+        slots = jnp.arange(k.shape[1])[None]                   # (1, S)
+        kv_valid = slots < valid_len[:, None]
+        w = jnp.asarray(window, jnp.int32)
+        weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+        kv_valid = jnp.logical_and(kv_valid,
+                                   slots >= valid_len[:, None] - weff)
+    o = sdpa(q, k, v, mask=None, logit_softcap=logit_softcap,
+             kv_valid=kv_valid)
+    return out_proj(params, o, dtype)
+
+
 def decode_attend(params: Params, x: jax.Array, k_cache: jax.Array,
                   v_cache: jax.Array, cache_len: jax.Array,
                   cos_q: Optional[jax.Array] = None,

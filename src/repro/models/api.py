@@ -507,6 +507,118 @@ def decode_chunk(decode: "DecodeAPI", params: Any, state: DecodeState,
     return toks, state, key
 
 
+def speculative_acceptance(feed: jax.Array, samples: jax.Array,
+                           budget: jax.Array, live: jax.Array,
+                           eos: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """The pure acceptance rule of the speculative state machine
+    (property-tested in isolation in tests/test_property.py).
+
+    feed (B, C): the verified inputs — last sampled token, then the
+    draft.  samples (B, C): the verify-exact samples, ``samples[:, c]``
+    drawn from position c's logits with the c-th key of the slot's
+    chain.  A draft token is accepted iff it EQUALS the sample the
+    sequential decode would have emitted there; the committed count is
+
+        m = min(longest matching draft prefix + 1, budget)
+
+    — the ``+ 1`` is the bonus token sampled from the verify logits at
+    the first mismatch (or after a fully-accepted draft), which is why
+    ``m >= 1`` for every live row and the loop always progresses.
+    ``budget`` (B,) caps acceptance at a family's window boundary
+    (samples at positions ``>= budget`` may be garbage — they can only
+    inflate the match count, never survive the cap, so they never reach
+    a stream).  ``eos`` (B,, < 0 disables) truncates acceptance at the
+    first emitted EOS inclusive.  Returns (m (B,) int32 — 0 for
+    non-live rows — and hit (B,) bool: EOS inside the accepted
+    prefix)."""
+    C = feed.shape[1]
+    match = (feed[:, 1:] == samples[:, :C - 1]).astype(jnp.int32)
+    a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    m = jnp.minimum(a + 1, jnp.maximum(budget, 1))
+    if eos is not None:
+        is_eos = jnp.logical_and(eos[:, None] >= 0,
+                                 samples == eos[:, None])
+        first = jnp.argmax(is_eos, axis=1).astype(jnp.int32)
+        has = jnp.any(is_eos, axis=1)
+        m = jnp.where(has, jnp.minimum(m, first + 1), m)
+        hit = jnp.logical_and(has, first < m)
+    else:
+        hit = jnp.zeros_like(live)
+    m = jnp.where(live, m, 0).astype(jnp.int32)
+    return m, jnp.logical_and(hit, live)
+
+
+def spec_chunk(decode: "DecodeAPI", params: Any, state: DecodeState,
+               token: jax.Array, draft: jax.Array, key: jax.Array,
+               temperature: jax.Array, active: jax.Array,
+               eos: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, DecodeState,
+                          jax.Array]:
+    """One speculative round as ONE dispatch: verify a k-token draft
+    per slot against the resident KV (:meth:`DecodeAPI.verify_chunk`),
+    accept the longest verify-exact prefix + one bonus token, commit by
+    a counter advance, roll back by NOT advancing.  The sampled-token
+    contract of :func:`decode_chunk` is preserved EXACTLY: emitted
+    tokens, per-slot key-chain positions, ``done`` flags and counters
+    all match what ``n_steps=m`` sequential steps would have produced —
+    speculation changes wall-clock only, never a stream.
+
+    token (B,): each slot's last sampled token.  draft (B, k): proposed
+    continuations.  key: per-slot (B, 2) keys (scheduler path — exact
+    for any temperature) or ONE shared key (engine path — each verify
+    position would need the shared key's batch-composition-dependent
+    draw, so only greedy decoding is exact there; the Engine enforces
+    that).  Returns (toks (B, k+1) — positions ``>= m`` are garbage,
+    frozen rows echo ``token`` — m (B,) accepted counts, last (B,) the
+    new last-sampled token, state, key)."""
+    B, k_draft = draft.shape
+    C = k_draft + 1
+    per_slot = key.ndim == 2
+    done0 = state.bookkeeping["done"]
+    live = jnp.logical_and(active, jnp.logical_not(done0))
+    synced = decode.maybe_sync(params, state)
+    feed = jnp.concatenate([token[:, None], draft.astype(jnp.int32)],
+                           axis=1)
+    logits, verified = decode.verify_chunk(params, synced, feed)
+
+    # the slot's key chain, C steps ahead of time: keys_seq[c] is the
+    # chain AFTER c emitted tokens, subs[c] the c-th sampling key —
+    # exactly decode_chunk's per-step split sequence
+    keys_seq, subs = [key], []
+    for _ in range(C):
+        if per_slot:
+            pair = jax.vmap(jax.random.split)(keys_seq[-1])
+            keys_seq.append(pair[:, 0])
+            subs.append(pair[:, 1])
+        else:
+            nxt, sub = jax.random.split(keys_seq[-1])
+            keys_seq.append(nxt)
+            subs.append(sub)
+    s = jnp.stack([sample_tokens(logits[:, c], temperature, subs[c])
+                   for c in range(C)], axis=1)               # (B, C)
+
+    m, hit = speculative_acceptance(feed, s, decode.verify_budget(synced),
+                                    live, eos)
+    new_state = decode.advance_lengths(verified, m)
+    new_state = new_state.with_bookkeeping(
+        done=jnp.logical_or(done0, hit))
+    new_state = new_state.where_rows(live, state)
+
+    if per_slot:
+        # each live row's chain advances by exactly its m — invariant to
+        # slot placement and batch composition, like decode_chunk
+        stack = jnp.stack(keys_seq, axis=0)                  # (C+1, B, 2)
+        key = jnp.take_along_axis(stack, m[None, :, None], axis=0)[0]
+    else:
+        key = keys_seq[-1]
+    last = jnp.take_along_axis(s, jnp.maximum(m - 1, 0)[:, None],
+                               axis=1)[:, 0]
+    last = jnp.where(live, last, token)
+    toks = jnp.where(live[:, None], s, token[:, None])
+    return toks, m, last, new_state, key
+
+
 # ---------------------------------------------------------------------------
 # DecodeAPI protocol + per-family implementations
 # ---------------------------------------------------------------------------
@@ -768,6 +880,42 @@ class DecodeAPI:
         """maybe_sync + raw_step: the unit scanned by decode_chunk."""
         return self.raw_step(params, self.maybe_sync(params, state), token)
 
+    # speculative decoding surface (see serving/speculative.py) -------------
+    def supports_speculative(self) -> bool:
+        """True when this family can verify a drafted chunk and roll
+        back by a length-counter decrement alone.  Families carrying
+        recurrent state (ssm / conv) cannot: the state after C steps is
+        not a function of a truncation point."""
+        return False
+
+    def verify_chunk(self, params, state: DecodeState, feed: jax.Array
+                     ) -> Tuple[jax.Array, DecodeState]:
+        """Score C fed tokens per slot against the resident KV in ONE
+        fixed-shape dispatch.  feed (B, C): position c is the token the
+        sequential decode would feed at generation offset c (the slot's
+        last sampled token, then the draft).  All C keys/values are
+        written through the views at the sequential write sites;
+        counters are NOT advanced — acceptance of an m-prefix is
+        :meth:`advance_lengths` and the rejected suffix becomes stale
+        garbage beyond the counter, causally masked and overwritten by
+        the next round before it could be attended.  Returns (logits
+        (B, C, V), state)."""
+        raise NotImplementedError
+
+    def verify_budget(self, state: DecodeState) -> jax.Array:
+        """(B,) int32: how many verified tokens each slot may ACCEPT
+        this round without overrunning a fixed-size window.  Evaluated
+        on the post-sync state; families without a bounded generation
+        window are unconstrained."""
+        return jnp.full((state.slots,), jnp.int32(2 ** 30))
+
+    def advance_lengths(self, state: DecodeState, m: jax.Array
+                        ) -> DecodeState:
+        """Commit an accepted m-token prefix (B,) by advancing the
+        per-slot length counter — the ONLY state change acceptance
+        makes (rollback is the complement: simply not advancing)."""
+        return state.with_bookkeeping(len=state.bookkeeping["len"] + m)
+
     # shared layout wiring (subclasses set the _KV_KEYS / _AXES /
     # _LENGTH_AXES / _QUANT_FIELDS class attributes) -------------------------
     _KV_KEYS: Tuple[str, ...] = ()
@@ -990,6 +1138,31 @@ class TConstDecode(DecodeAPI):
                                                mode=self.mode)
         return logits, state.absorb(out)
 
+    # speculative surface: verify writes into the O(1) gen window; a
+    # slot may only ACCEPT up to the window boundary (the resync that
+    # follows rebuilds ctx/hist KV from token ids, so accepted tokens
+    # recorded in the id buffer survive it; rejected ones beyond
+    # gen_len were never recorded)
+    def supports_speculative(self):
+        return True
+
+    def verify_chunk(self, params, state, feed):
+        with self._mesh_scope():
+            logits, out = TC.verify_chunk_views(params,
+                                                state.decode_views(),
+                                                feed, self.cfg,
+                                                mode=self.mode)
+        return logits, state.absorb(out)
+
+    def verify_budget(self, state):
+        return jnp.maximum(
+            jnp.int32(self.cfg.tconst.w_og) -
+            state.bookkeeping["gen_len"], 0).astype(jnp.int32)
+
+    def advance_lengths(self, state, m):
+        return state.with_bookkeeping(
+            gen_len=state.bookkeeping["gen_len"] + m)
+
     def sync_mask(self, state):
         return TC.pending_resync_rows(state.bookkeeping, self.cfg)
 
@@ -1080,6 +1253,18 @@ class DenseDecode(DecodeAPI):
                                                   token, self.cfg)
         return logits, state.absorb(out)
 
+    def supports_speculative(self):
+        # recurrent ssm/conv state advances through VERIFIED-BUT-REJECTED
+        # tokens and cannot be rolled back by a length decrement
+        return self.cfg.arch_type != "ssm" and not self.cfg.hybrid_parallel
+
+    def verify_chunk(self, params, state, feed):
+        with self._mesh_scope():
+            logits, out = LM.lm_verify_chunk_views(params,
+                                                   state.decode_views(),
+                                                   feed, self.cfg)
+        return logits, state.absorb(out)
+
     # chunked admission hooks (generic driver in DecodeAPI) -----------------
     def supports_chunked_prefill(self, extras=None):
         # VLM vision positions depend on a prompt-length-shaped mask (one
@@ -1150,6 +1335,15 @@ class EncDecDecode(DecodeAPI):
             logits, out = ED.encdec_decode_step_views(params,
                                                       state.decode_views(),
                                                       token, self.cfg)
+        return logits, state.absorb(out)
+
+    def supports_speculative(self):
+        return True
+
+    def verify_chunk(self, params, state, feed):
+        with self._mesh_scope():
+            logits, out = ED.encdec_verify_chunk_views(
+                params, state.decode_views(), feed, self.cfg)
         return logits, state.absorb(out)
 
     # chunked admission hooks: the encoder runs ONCE at seed time (fixed

@@ -343,6 +343,59 @@ def encdec_decode_step_views(params: Params, cache: Dict[str, Any],
     return logits, cache
 
 
+def encdec_verify_chunk_views(params: Params, cache: Dict[str, Any],
+                              feed: jax.Array, cfg: ModelConfig
+                              ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Speculative VERIFY: score C fed decoder tokens per slot in one
+    fixed-shape dispatch (:func:`encdec_decode_step_views` with the
+    C-step loop collapsed into one chunk attention per layer).  The
+    C keys/values land at decoder positions ``len + c`` through the
+    views; ``len`` is NOT advanced — acceptance is a later ``len += m``
+    and the rejected suffix is causally masked stale garbage.  The
+    frozen cross K/V is read via C-query cross-attention.
+    Returns (logits (B, C, V), cache — counters untouched)."""
+    from repro.kernels import ops
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B, C = feed.shape
+    x = E.embed_tokens(params["embed"], feed, dtype)             # (B, C, D)
+    pos = cache["len"][:, None] + \
+        jnp.arange(C, dtype=jnp.int32)[None]                     # (B, C)
+    cos, sin = R.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    window = cfg.sliding_window if cfg.attention_mode == "sliding" else 0
+
+    def body(i, carry):
+        x, k_all, v_all = carry
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["dec_layers"])
+        xn = layernorm(layer["ln1"], x, eps)
+        q, k_new, v_new = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k_new = R.apply_rope(k_new, cos, sin)
+        kv, vv = k_all.layer(i), v_all.layer(i)
+        for c in range(C):
+            kv = kv.write_token(cache["len"] + c, k_new[:, c])
+            vv = vv.write_token(cache["len"] + c, v_new[:, c])
+        kd = kv.dense().astype(dtype)
+        kpos = jnp.arange(kd.shape[1], dtype=jnp.int32)
+        o = ops.prefill_chunk_attention(q, kd, vv.dense().astype(dtype),
+                                        pos, kpos, window, 0.0)
+        x = x + A.out_proj(layer["attn"], o, dtype)
+        xc = layernorm(layer["lnc"], x, eps)
+        x = x + A.verify_attend_view(
+            layer["cross"], xc, cache["cross_k"].layer(i),
+            cache["cross_v"].layer(i), None)
+        x = x + gelu_mlp(layer["ffn"], layernorm(layer["ln2"], x, eps))
+        return x, k_all.set_layer(i, kv), v_all.set_layer(i, vv)
+
+    x, k_all, v_all = jax.lax.fori_loop(
+        0, cfg.n_layers, body, (x, cache["k"], cache["v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = k_all, v_all
+    x = layernorm(params["dec_norm"], x, eps)
+    logits = E.lm_head(params["embed"], x)                       # (B, C, V)
+    return logits, cache
+
+
 def encdec_decode_step(params: Params, cache: Dict[str, Any],
                        token: jax.Array, cfg: ModelConfig
                        ) -> Tuple[jax.Array, Dict[str, Any]]:

@@ -396,6 +396,81 @@ def lm_decode_step(params: Params, cache: Dict[str, Any], token: jax.Array,
                     for k, v in out.items()}
 
 
+def lm_verify_chunk_views(params: Params, cache: Dict[str, Any],
+                          feed: jax.Array, cfg: ModelConfig
+                          ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Speculative VERIFY: score C fed tokens per slot in ONE
+    fixed-shape dispatch — :func:`lm_decode_step_views` with the
+    sequential C-step loop collapsed into a single
+    :func:`repro.kernels.ops.prefill_chunk_attention` per layer.
+
+    feed: (B, C) int32 — position c is what the sequential decode would
+    feed at ``len + c``.  All C keys/values are written through the
+    views at positions ``len + c`` (exactly the sequential write
+    sites); ``len`` is NOT advanced — acceptance of an m-prefix is a
+    later ``len += m`` and the rejected suffix becomes stale garbage
+    beyond ``len``, masked by causality here and overwritten by the
+    next round before it could ever be attended.  Recurrent-state
+    families (ssm / hybrid) cannot roll back and are excluded by
+    :meth:`DenseDecode.supports_speculative`.
+
+    Returns (logits (B, C, V), cache — counters untouched).
+    """
+    from repro.kernels import ops
+    assert cfg.arch_type != "ssm" and not cfg.hybrid_parallel, \
+        "recurrent state cannot be rolled back by a length decrement"
+    B, C = feed.shape
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    x = E.embed_tokens(params["embed"], feed, dtype)             # (B, C, D)
+    pos = cache["len"][:, None] + \
+        jnp.arange(C, dtype=jnp.int32)[None]                     # (B, C)
+    cos, sin = _rope_tables(cfg, pos, None)
+    windows = jnp.asarray(layer_windows(cfg))
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+
+    def layer_verify(layer, x, kv, vv, window, moe):
+        xn = rmsnorm(layer["ln1"], x, eps)
+        q, k_new, v_new = A.qkv_proj(layer["attn"], xn, xn, dtype)
+        q = R.apply_rope(q, cos, sin)
+        k_new = R.apply_rope(k_new, cos, sin)
+        for c in range(C):
+            kv = kv.write_token(cache["len"] + c, k_new[:, c])
+            vv = vv.write_token(cache["len"] + c, v_new[:, c])
+        kd = kv.dense().astype(dtype)
+        kpos = jnp.arange(kd.shape[1], dtype=jnp.int32)
+        o = ops.prefill_chunk_attention(q, kd, vv.dense().astype(dtype),
+                                        pos, kpos, window,
+                                        cfg.logit_softcap)
+        x = x + A.out_proj(layer["attn"], o, dtype)
+        f, _ = _ffn(layer, rmsnorm(layer["ln2"], x, eps), cfg, moe)
+        return x + f, kv, vv
+
+    cache = dict(cache)
+    for i, layer in enumerate(params.get("dense_layers", [])):
+        x, nk, nv = layer_verify(layer, x, cache["dense_k"].layer(i),
+                                 cache["dense_v"].layer(i), windows[i],
+                                 False)
+        cache["dense_k"] = cache["dense_k"].set_layer(i, nk)
+        cache["dense_v"] = cache["dense_v"].set_layer(i, nv)
+
+    scan_windows = jnp.asarray(windows[n_dense:])
+
+    def body(i, carry):
+        x, kb, vb = carry
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        x, nk, nv = layer_verify(layer, x, kb.layer(i), vb.layer(i),
+                                 scan_windows[i], cfg.is_moe)
+        return (x, kb.set_layer(i, nk), vb.set_layer(i, nv))
+
+    x, kb, vb = jax.lax.fori_loop(
+        0, cfg.n_layers - n_dense, body, (x, cache["k"], cache["v"]))
+    cache["k"], cache["v"] = kb, vb
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = E.lm_head(params["embed"], x, cfg.logit_softcap)   # (B, C, V)
+    return logits, cache
+
+
 def lm_prefill_chunk(params: Params, row: Dict[str, Any],
                      tokens: jax.Array, start: jax.Array,
                      n_valid: jax.Array, cfg: ModelConfig

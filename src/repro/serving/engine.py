@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import ModelAPI, build_decode, decode_chunk
+from repro.models.api import ModelAPI, build_decode, decode_chunk, spec_chunk
 
 
 @dataclasses.dataclass
@@ -173,6 +173,79 @@ class Engine:
             token = self._select(logits)
             out.append(token)
         return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # ------------------------------------------------------------------
+    def generate_speculative(self, batch: Dict[str, Any], n_tokens: int,
+                             k: int = 4, drafter: Optional[Any] = None
+                             ) -> np.ndarray:
+        """Speculative generation, token-identical to :meth:`generate`:
+        each round drafts k tokens per row (``drafter``; default: a
+        fresh per-row :class:`~repro.serving.speculative.NGramDrafter`)
+        and verifies them in ONE ``spec_chunk`` dispatch, committing the
+        verify-exact accepted prefix + bonus token.
+
+        GREEDY ONLY: the Engine samples with one SHARED batch key, and a
+        shared-key categorical draw at verify position c depends on the
+        whole batch's acceptance positions — it cannot be replayed
+        exactly.  The scheduler path (per-slot key chains) is exact for
+        any temperature; here a ``sample_temperature > 0`` raises.
+        Rows that reach ``n_tokens`` freeze (bit-identically) while
+        stragglers catch up.  Returns (B, n_tokens) ids; the round
+        count of the last call lands in ``self.spec_rounds``."""
+        if self.temperature > 0.0:
+            raise ValueError(
+                "speculative Engine generation is greedy-only: the "
+                "shared batch sampling key cannot replay per-row "
+                "accepted positions exactly — use the SlotScheduler "
+                "(per-slot key chains) for sampled speculative decoding")
+        if not self.decode.supports_speculative():
+            raise ValueError(
+                "this model family cannot decode speculatively "
+                "(recurrent state cannot roll back)")
+        prompt = np.asarray(batch["tokens"])
+        need = prompt.shape[1] + n_tokens + 2 * k + 1
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt {prompt.shape[1]} + n_tokens {n_tokens} + "
+                f"speculative headroom {2 * k + 1} exceeds max_len "
+                f"{self.max_len}")
+        from repro.serving.speculative import NGramDrafter
+        logits, state = jax.block_until_ready(
+            self._prefill(self.params, batch))
+        token = self._select(logits)
+        B = token.shape[0]
+        if drafter is None:
+            drafter = NGramDrafter(B)
+        spec = getattr(self, "_spec", None)
+        if spec is None:
+            spec = jax.jit(functools.partial(spec_chunk, self.decode))
+            self._spec = spec
+        t_host = np.asarray(token)
+        out: List[List[int]] = [[int(t_host[b])] for b in range(B)]
+        for b in range(B):
+            drafter.admit(b, prompt[b].tolist() + [int(t_host[b])])
+        temps = jnp.full((B,), self.temperature, jnp.float32)
+        rounds = 0
+        while min(len(o) for o in out) < n_tokens:
+            active = jnp.asarray(
+                np.array([len(o) < n_tokens for o in out]))
+            draft = drafter.propose_batch(k)
+            t0 = time.perf_counter()
+            toks, m, token, state, self.key = spec(
+                self.params, state, token, jnp.asarray(draft), self.key,
+                temps, active)
+            hm = np.asarray(m)
+            ht = np.asarray(toks)
+            self._stat("spec_chunk", time.perf_counter() - t0,
+                       tokens=int(hm.sum()))
+            for b in range(B):
+                if hm[b]:
+                    acc = ht[b, :hm[b]].tolist()
+                    out[b].extend(acc)
+                    drafter.observe(b, acc)
+            rounds += 1
+        self.spec_rounds = rounds
+        return np.asarray([o[:n_tokens] for o in out], np.int32)
 
     # ------------------------------------------------------------------
     def time_chunked_decode(self, batch: Dict[str, Any], n_tokens: int

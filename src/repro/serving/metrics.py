@@ -64,6 +64,20 @@ class SessionRecord:
     resumes: int = 0
     retire_clock: Optional[int] = None
     done: bool = False
+    # speculative decoding: per-slot draft/accept totals (verify-exact,
+    # so these are throughput figures — never stream content)
+    spec_rounds: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Accepted draft tokens / drafted tokens (the bonus token is
+        excluded from both sides: it is sequential progress, not a
+        speculation win).  None when the session never speculated."""
+        if self.spec_drafted == 0:
+            return None
+        return self.spec_accepted / self.spec_drafted
 
     @property
     def queue_wait_chunks(self) -> Optional[int]:
@@ -160,6 +174,15 @@ class ServingTelemetry:
         rec.last_token_clock = clock
         rec.tokens_out += n_new
 
+    def on_spec(self, session, drafted: int, accepted: int) -> None:
+        """One speculative verify round for ``session``: ``drafted``
+        tokens proposed, ``accepted`` of them verified-exact (bonus
+        token excluded from both counts)."""
+        rec = self.records[session.sid]
+        rec.spec_rounds += 1
+        rec.spec_drafted += drafted
+        rec.spec_accepted += accepted
+
     def on_retire(self, session, clock: int) -> None:
         rec = self.records[session.sid]
         rec.retire_clock = clock
@@ -209,7 +232,30 @@ class ServingTelemetry:
             },
             "spills": sum(r.spills for r in recs),
             "resumes": sum(r.resumes for r in recs),
+            "spec_decode": self._spec_summary(recs),
             "pool_occupancy_mean": (
                 sum(1.0 - o["free_pages"] / o["total_pages"] for o in occ)
                 / len(occ)) if occ else None,
+        }
+
+    @staticmethod
+    def _spec_summary(recs) -> Optional[dict]:
+        """Speculative-decoding block: None when nothing speculated."""
+        spec = [r for r in recs if r.spec_rounds]
+        if not spec:
+            return None
+        rates = [r.acceptance_rate for r in spec
+                 if r.acceptance_rate is not None]
+        drafted = sum(r.spec_drafted for r in spec)
+        accepted = sum(r.spec_accepted for r in spec)
+        rounds = sum(r.spec_rounds for r in spec)
+        return {
+            "sessions": len(spec),
+            "rounds": rounds,
+            "drafted": drafted,
+            "accepted": accepted,
+            "acceptance_rate": (accepted / drafted) if drafted else None,
+            "acceptance_rate_p50": percentile(rates, 50),
+            "tokens_per_round": (
+                (accepted + rounds) / rounds) if rounds else None,
         }

@@ -100,11 +100,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layouts as LT
-from repro.models.api import DecodeAPI, decode_chunk, sample_tokens
+from repro.models.api import (DecodeAPI, decode_chunk, sample_tokens,
+                              spec_chunk)
 from repro.serving.engine import StepStats, tag_compiled
 from repro.serving.metrics import ServingTelemetry
 from repro.serving.policy import FifoPolicy, SchedulingPolicy, get_policy
 from repro.serving.session import Session
+from repro.serving.speculative import Drafter, get_drafter
 from repro.serving.tier_store import (Blob, TierStore, flatten_slot_snapshot,
                                       unflatten_slot_snapshot)
 
@@ -118,7 +120,9 @@ class SlotScheduler:
                  tier_store: Optional[TierStore] = None,
                  preempt_chunks: Optional[int] = None,
                  policy: Union[SchedulingPolicy, str, None] = None,
-                 telemetry: Optional[ServingTelemetry] = None):
+                 telemetry: Optional[ServingTelemetry] = None,
+                 speculate: int = 0,
+                 drafter: Union["Drafter", str, None] = None):
         # accept a ModelAPI facade too (duck-typed .decode)
         if not isinstance(decode, DecodeAPI) and hasattr(decode, "decode"):
             decode = decode.decode
@@ -126,11 +130,33 @@ class SlotScheduler:
             raise ValueError("scheduler needs at least one decode slot")
         if chunk_size < 1:
             raise ValueError("chunk_size must be positive")
+        if speculate < 0:
+            raise ValueError("speculate must be >= 0 draft tokens")
+        if speculate and not decode.supports_speculative():
+            raise ValueError(
+                "this model family cannot decode speculatively: rolling "
+                "back rejected drafts needs state that is a pure function "
+                "of a truncation point (recurrent ssm/conv state is not)")
         self.decode = decode
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.chunk_size = chunk_size
+        # speculative decoding: one step() = one draft/verify round of
+        # up to speculate + 1 tokens per live slot (the headroom both
+        # the token buffer and the page reservation must carry)
+        self.speculate = int(speculate)
+        self._headroom = max(chunk_size, self.speculate + 1)
+        self.drafter: Optional[Drafter] = None
+        if self.speculate:
+            if drafter is None:
+                drafter = "ngram"
+            if isinstance(drafter, str):
+                drafter = get_drafter(drafter, slots=slots,
+                                      vocab=decode.cfg.vocab_size,
+                                      max_len=max_len, seed=seed)
+            self.drafter = drafter
+            self._spec = jax.jit(functools.partial(spec_chunk, decode))
         # chunked KV-conditioned admission: default rides on the decode
         # protocol (build_decode(prefill_chunk=...)); None = one-shot
         # full-prompt prefill (one compile per distinct prompt length)
@@ -256,7 +282,7 @@ class SlotScheduler:
 
     # ------------------------------------------------------------------
     def _pages_needed(self, session: Session) -> int:
-        need = len(session.prompt) + session.max_new_tokens + self.chunk_size
+        need = len(session.prompt) + session.max_new_tokens + self._headroom
         return -(-need // self.layout.page)
 
     def submit(self, session: Session) -> Session:
@@ -264,14 +290,16 @@ class SlotScheduler:
         # decode writes token ids into the slot's fixed (max_len,) buffer;
         # an overflowing write would be silently dropped by the scatter and
         # corrupt the next resync, so reject oversized requests up front
-        # (chunk_size headroom: a session may overshoot its budget by up
-        # to one chunk before it is retired at the chunk boundary).
-        need = len(session.prompt) + session.max_new_tokens + self.chunk_size
+        # (headroom: a session may overshoot its budget by up to one
+        # chunk — or one speculate+1 verify round — before it is retired
+        # at the boundary, and a verify round WRITES all speculate+1
+        # positions before acceptance truncates).
+        need = len(session.prompt) + session.max_new_tokens + self._headroom
         if need > self.max_len:
             raise ValueError(
                 f"session {session.sid}: prompt {len(session.prompt)} + "
-                f"max_new_tokens {session.max_new_tokens} (+ chunk "
-                f"{self.chunk_size}) exceeds max_len {self.max_len}")
+                f"max_new_tokens {session.max_new_tokens} (+ headroom "
+                f"{self._headroom}) exceeds max_len {self.max_len}")
         # total-pool capacity check: a session needing more pages than the
         # POOL holds would pass a max_len-only check but could never be
         # admitted, leaving run() to spin on it forever
@@ -552,6 +580,9 @@ class SlotScheduler:
         self.temps[slot] = session.temperature
         self.eos[slot] = -1 if session.eos_id is None else session.eos_id
         self._slot_chunks[slot] = 0
+        if self.drafter is not None:
+            # re-seed the drafter with the full resumed stream
+            self.drafter.admit(slot, list(session.prompt) + session.tokens)
         if self.telemetry is not None:
             self.telemetry.on_admit(session, self.clock, "resume")
 
@@ -793,6 +824,9 @@ class SlotScheduler:
         if self.telemetry is not None:
             self.telemetry.on_admit(session, self.clock, source)
         session.deliver([int(t0k)])          # first token: prefill logits
+        if self.drafter is not None:
+            # the drafter's window = prompt + everything delivered
+            self.drafter.admit(slot, list(session.prompt) + session.tokens)
         if self.telemetry is not None:
             self.telemetry.on_tokens(session, len(session.tokens),
                                      self.clock,
@@ -876,7 +910,7 @@ class SlotScheduler:
         that actually decode this chunk."""
         run_mask = self.active.copy()
         anticipated = self.decode.sync_anticipated(self.state,
-                                                   self.chunk_size)
+                                                   self._headroom)
         for slot in np.nonzero(self.active)[0]:
             if anticipated[slot] and not self._make_slot_private(int(slot)):
                 run_mask[slot] = False
@@ -914,6 +948,8 @@ class SlotScheduler:
 
     # ------------------------------------------------------------------
     def _release(self, slot: int) -> None:
+        if self.drafter is not None:
+            self.drafter.release(slot)
         self.sessions[slot] = None
         self.active[slot] = False
         self.temps[slot] = 0.0
@@ -1003,6 +1039,8 @@ class SlotScheduler:
         if not run_mask.any():
             self._tick_telemetry()
             return admitted            # every active slot fork-paused
+        if self.speculate:
+            return self._spec_step(run_mask) or admitted
         t0 = time.perf_counter()
         toks, self.state, self.slot_keys = self._chunk(
             self.params, self.state, self.last_token, self.slot_keys,
@@ -1022,6 +1060,52 @@ class SlotScheduler:
             if self.telemetry is not None:
                 self.telemetry.on_tokens(sess, len(sess.tokens) - before,
                                          self.clock, compiled)
+            if sess.done:
+                self._release(slot)
+                if self.telemetry is not None:
+                    self.telemetry.on_retire(sess, self.clock)
+        self._tick_telemetry()
+        return True
+
+    def _spec_step(self, run_mask: np.ndarray) -> bool:
+        """One speculative round for the running slots: the drafter
+        proposes k tokens per slot, ONE ``spec_chunk`` dispatch verifies
+        them all against the resident KV, and each live slot commits its
+        verify-exact accepted prefix + bonus token (1..k+1 tokens).  The
+        per-slot key chains advance by exactly the accepted counts, so
+        streams stay token-identical to the non-speculative run — the
+        acceptance rate moves throughput only (recorded per session via
+        ``telemetry.on_spec``)."""
+        k = self.speculate
+        draft = self.drafter.propose_batch(k)
+        t0 = time.perf_counter()
+        toks, m, last, self.state, self.slot_keys = self._spec(
+            self.params, self.state, self.last_token, jnp.asarray(draft),
+            self.slot_keys, jnp.asarray(self.temps),
+            jnp.asarray(run_mask), eos=jnp.asarray(self.eos))
+        self.last_token = last
+        host_toks = np.asarray(toks)         # the ONE host sync per round
+        host_m = np.asarray(m)
+        compiled = tag_compiled(self._warm, "spec_chunk")
+        self.stats.append(StepStats(
+            "spec_chunk", time.perf_counter() - t0,
+            tokens=int(host_m[np.nonzero(run_mask)[0]].sum()),
+            compiled=compiled, forward_tokens=k + 1))
+        for slot in np.nonzero(run_mask)[0]:
+            self._slot_chunks[slot] += 1
+            sess = self.sessions[slot]
+            acc = host_toks[slot, :host_m[slot]].tolist()
+            before = len(sess.tokens)
+            sess.deliver(acc)
+            if self.drafter is not None and not sess.done:
+                # the drafter tracks STATE CONTENT (committed tokens),
+                # even past the delivery budget clip
+                self.drafter.observe(slot, acc)
+            if self.telemetry is not None:
+                self.telemetry.on_tokens(sess, len(sess.tokens) - before,
+                                         self.clock, compiled)
+                self.telemetry.on_spec(sess, drafted=k,
+                                       accepted=int(host_m[slot]) - 1)
             if sess.done:
                 self._release(slot)
                 if self.telemetry is not None:

@@ -153,6 +153,10 @@ class TierStore:
         n = self._pins.get(key, 0) - 1
         if n <= 0:
             self._pins.pop(key, None)
+            # an entry kept over capacity ONLY by its pin loses that
+            # excuse now — evict eagerly instead of letting it squat in
+            # RAM until the next unrelated put
+            self._evict_to_capacity()
         else:
             self._pins[key] = n
 

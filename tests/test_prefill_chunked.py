@@ -27,72 +27,47 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 from repro.config import get_config, reduced
 from repro.models import layouts as LT
 from repro.models.api import build_decode, build_model
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
 
-PAGE = 16
+PAGE = parity.PAGE
 CHUNK = 16
+
+# family fixtures, layout specs, extras, prompts and the scheduler
+# driver live in tests/parity.py — shared with the tiering, sharding and
+# prefix-sharing suites
+_spec = parity.layout_spec
+_extras = parity.extras_for
+_shared_prompts = parity.shared_prompts
 
 
 @pytest.fixture(scope="module")
 def lm_setup():
-    cfg = reduced(get_config("smollm_360m"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("lm")
 
 
 @pytest.fixture(scope="module")
 def tlin_setup():
-    cfg = reduced(get_config("tconst_41m"), dtype="float32",
-                  attention_mode="tlin")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("tlin")
 
 
 @pytest.fixture(scope="module")
 def tconst_setup():
-    cfg = reduced(get_config("tconst_41m"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("tconst")
 
 
 @pytest.fixture(scope="module")
 def encdec_setup():
-    cfg = reduced(get_config("whisper_small"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("encdec")
 
 
-def _spec(kind):
-    if kind == "dense":
-        return None
-    return LT.LayoutSpec(kind=kind, page_size=PAGE, pool_pages=24)
-
-
-def _extras(cfg):
-    if not cfg.is_encdec:
-        return None
-    rng = np.random.RandomState(9)
-    return {"audio_feats": rng.randn(
-        cfg.encoder_seq, cfg.frontend_dim).astype(np.float32)}
-
-
-def _serve(cfg, params, prompts, spec, prefill_chunk, gen=6,
-           stagger=True, slots=2, **kw):
-    sched = SlotScheduler(build_decode(cfg, spec), params, slots=slots,
-                          max_len=128, chunk_size=4,
-                          prefill_chunk=prefill_chunk, **kw)
-    sessions = []
-    for p in prompts:
-        sessions.append(sched.submit(Session(
-            p, max_new_tokens=gen, extras=_extras(cfg))))
-        if stagger:
-            sched.step()       # staggered admission: mixed resync phases
-    sched.run()
-    return [s.tokens for s in sessions], sched
+def _serve(cfg, params, prompts, spec, prefill_chunk, **kw):
+    return parity.serve_streams(cfg, params, prompts, spec,
+                                prefill_chunk=prefill_chunk, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -102,32 +77,18 @@ def _serve(cfg, params, prompts, spec, prefill_chunk, gen=6,
 
 @pytest.mark.parametrize("kind", ["dense", "paged", "paged_int8"])
 @pytest.mark.parametrize("family", ["tconst", "tlin", "lm", "encdec"])
-def test_chunked_admission_token_identical(family, kind, request):
+def test_chunked_admission_token_identical(family, kind):
     """Chunked admission streams match one-shot admission exactly for
     every layout x family, under staggered continuous batching."""
-    cfg, api, params = request.getfixturevalue(f"{family}_setup")
-    rng = np.random.RandomState(3)
-    prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
-               for n in (21, 34, 17)]
-    ref, _ = _serve(cfg, params, prompts, _spec(kind), None)
-    out, sched = _serve(cfg, params, prompts, _spec(kind), CHUNK)
-    assert out == ref, f"chunked admission changed the {family}/{kind} " \
-                       f"streams"
+    _, sched = parity.stream_parity_case(
+        family, kind, variant_kw={"prefill_chunk": CHUNK},
+        label=f"chunked admission {family}/{kind}")
     assert all(s.forward_tokens is not None for s in sched.admit_stats)
 
 
 # ---------------------------------------------------------------------------
 # 2. tail-only compute for shared prefixes
 # ---------------------------------------------------------------------------
-
-
-def _shared_prompts(cfg, n, common_len=48, tail_len=8, seed=0):
-    rng = np.random.RandomState(seed)
-    common = rng.randint(1, cfg.vocab_size,
-                         size=common_len).astype(np.int32)
-    return [np.concatenate([common, rng.randint(
-        1, cfg.vocab_size, size=tail_len).astype(np.int32)])
-        for _ in range(n)]
 
 
 @pytest.mark.parametrize("kind", ["paged", "paged_int8"])
@@ -267,15 +228,7 @@ def test_read_slot_matches_merged_oracle(lm_setup, kind):
     sched.submit(Session(np.arange(1, 22, dtype=np.int32),
                          max_new_tokens=2))
     sched.step()
-    state = sched.state
-    row = jax.jit(state.read_slot)(np.int32(0))
-    oracle = state.merged()
-    for f, v in row.items():
-        ref = jax.lax.dynamic_slice_in_dim(oracle[f], 0, 1,
-                                           state.axes[f])
-        np.testing.assert_allclose(np.asarray(v), np.asarray(ref),
-                                   rtol=0, atol=0,
-                                   err_msg=f"read_slot({f}) != oracle")
+    parity.assert_read_slot_matches_merged(sched.state)
 
 
 @pytest.mark.parametrize("kind", ["paged", "paged_int8"])

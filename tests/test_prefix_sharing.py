@@ -21,40 +21,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import get_config, reduced
-from repro.models import layouts as LT
-from repro.models.api import build_decode, build_model
+from repro.models.api import build_decode
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
 
+import parity
+
 
 @pytest.fixture(scope="module")
 def tlin_setup():
-    cfg = reduced(get_config("tconst_41m"), dtype="float32",
-                  attention_mode="tlin")
-    api = build_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    return cfg, api, params
+    return parity.family("tlin")
 
 
 @pytest.fixture(scope="module")
 def lm_setup():
-    cfg = reduced(get_config("llama3_405b"), dtype="float32")
-    api = build_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    return cfg, api, params
+    return parity.family("lm_mqa")
 
 
 def _shared_prompts(cfg, n, common_len=32, tail_len=8, seed=0):
-    """n prompts sharing a page-aligned common prefix, distinct equal-
-    length tails (equal lengths keep prefill bitwise-reproducible, so
-    greedy parity with solo runs is exact)."""
-    rng = np.random.RandomState(seed)
-    common = rng.randint(1, cfg.vocab_size, size=common_len).astype(np.int32)
-    return [np.concatenate([common, rng.randint(
-        1, cfg.vocab_size, size=tail_len).astype(np.int32)])
-        for _ in range(n)]
+    # 32-token common prefix = exactly 2 pages at this suite's page size
+    return parity.shared_prompts(cfg, n, common_len=common_len,
+                                 tail_len=tail_len, seed=seed)
+
+
+def _spec(kind, pool_pages):
+    return parity.layout_spec(kind, pool_pages=pool_pages)
 
 
 def _paged_snapshot(state, pages):
@@ -79,8 +71,7 @@ def test_submit_rejects_session_exceeding_pool_capacity(tlin_setup):
     max_len-only check but can never be admitted — submit must reject it
     up front instead of letting run() spin on it forever."""
     cfg, api, params = tlin_setup
-    dec = build_decode(cfg, LT.LayoutSpec(kind="paged", page_size=16,
-                                          pool_pages=4))
+    dec = build_decode(cfg, _spec("paged", pool_pages=4))
     sched = SlotScheduler(dec, params, slots=1, max_len=128, chunk_size=4)
     with pytest.raises(ValueError, match="could never be admitted"):
         # prompt 40 + gen 30 + chunk 4 = 74 tokens -> 5 pages > pool 4
@@ -92,8 +83,7 @@ def test_run_raises_instead_of_spinning_when_stuck(tlin_setup):
     """If nothing is active and the pending head cannot be admitted, no
     future chunk can free resources — run() must raise, not busy-spin."""
     cfg, api, params = tlin_setup
-    dec = build_decode(cfg, LT.LayoutSpec(kind="paged", page_size=16,
-                                          pool_pages=10))
+    dec = build_decode(cfg, _spec("paged", pool_pages=10))
     sched = SlotScheduler(dec, params, slots=1, max_len=128, chunk_size=4)
     sched.submit(Session(np.ones(20, np.int32), max_new_tokens=8))
     sched.free_pages.clear()          # simulate leaked page accounting
@@ -107,7 +97,7 @@ def test_head_of_line_blocking_bounded_skip_ahead(lm_setup):
     and a free slot must be admitted past it (the pre-fix scheduler
     stopped at the blocked head), while the head still completes."""
     cfg, api, params = lm_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=6)
+    spec = _spec("paged", pool_pages=6)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
                           max_len=128, chunk_size=4)
     big_a = sched.submit(Session(np.ones(40, np.int32), max_new_tokens=8))
@@ -153,7 +143,7 @@ def test_prefix_sharing_cow_parity_token_identical(tlin_setup, kind):
     solo runs through the copy-on-write resync fork, and recycle every
     page (refcount 0, map empty) after eviction."""
     cfg, api, params = tlin_setup
-    spec = LT.LayoutSpec(kind=kind, page_size=16, pool_pages=14)
+    spec = _spec(kind, pool_pages=14)
     prompts = _shared_prompts(cfg, 3)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
                           max_len=128, chunk_size=4, prefix_sharing=True)
@@ -201,7 +191,7 @@ def test_resync_never_writes_shared_pages(tlin_setup):
     to fresh ones) — and pages that stay shared through the chunk come
     out bit-identical."""
     cfg, api, params = tlin_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=14)
+    spec = _spec("paged", pool_pages=14)
     prompts = _shared_prompts(cfg, 3, seed=1)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
                           max_len=128, chunk_size=4, prefix_sharing=True)
@@ -244,7 +234,7 @@ def test_lm_prefix_sharing_persists_across_staggered_admission(lm_setup):
     session lifetime, even across staggered admission — and the streams
     still match the solo runs exactly."""
     cfg, api, params = lm_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=10)
+    spec = _spec("paged", pool_pages=10)
     pa, pb = _shared_prompts(cfg, 2, seed=2)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=2,
                           max_len=128, chunk_size=4, prefix_sharing=True)
@@ -281,7 +271,7 @@ def test_fork_starvation_pauses_slot_instead_of_crashing(tlin_setup):
     session; it resumes — and its stream stays exact — once a retiring
     session frees pages."""
     cfg, api, params = tlin_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=8)
+    spec = _spec("paged", pool_pages=8)
     pa, pb = _shared_prompts(cfg, 2, seed=4)          # 4 pages each, 2 shared
     small = np.arange(1, 21, dtype=np.int32) % cfg.vocab_size   # 2 pages
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
@@ -311,7 +301,7 @@ def test_multi_adopter_overcommit_resolves_via_pausing(tlin_setup):
     the pool — the run must resolve through pausing + retirement, never
     wedge or crash, and every stream stays exact."""
     cfg, api, params = tlin_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=10)
+    spec = _spec("paged", pool_pages=10)
     prompts = _shared_prompts(cfg, 3, seed=5)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,
                           max_len=128, chunk_size=4, prefix_sharing=True)
@@ -337,7 +327,7 @@ def test_scheduler_stress_undersized_pool_mixed_sizes(tlin_setup):
     on — the run must terminate with every budget honoured, the skip-
     ahead bounded, and the pool fully recycled."""
     cfg, api, params = tlin_setup
-    spec = LT.LayoutSpec(kind="paged", page_size=16, pool_pages=12)
+    spec = _spec("paged", pool_pages=12)
     rng = np.random.RandomState(3)
     common = rng.randint(1, cfg.vocab_size, size=32).astype(np.int32)
     sched = SlotScheduler(build_decode(cfg, spec), params, slots=3,

@@ -2,14 +2,22 @@
 
 ``hypothesis`` is an OPTIONAL dev dependency (see pyproject.toml): when
 it is not installed this module skips instead of breaking collection of
-the whole suite.  CI installs it so these tests always run there.
+the whole suite.  CI sets ``REPRO_REQUIRE_HYPOTHESIS=1`` so a broken
+install FAILS collection loudly there — before the guard, a CI image
+that silently lost the dependency reported this whole file as "passed"
+while running zero examples.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    import hypothesis  # noqa: F401  (ImportError = loud CI failure)
+else:
+    pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import ModelConfig, TConstConfig
@@ -120,3 +128,180 @@ def test_decode_attend_is_permutation_invariant_in_dead_slots(seed):
     v2 = jnp.where(slot >= vl[:, None, None, None], v + noise, v)
     o2 = decode_reference(q, k2, v2, vl)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Speculative acceptance (PR 10): the pure accept/rollback state machine
+# ---------------------------------------------------------------------------
+
+
+def _acceptance_reference(feed, samples, budget, live, eos):
+    """Pure-Python oracle for ``models.api.speculative_acceptance``."""
+    B, C = feed.shape
+    ms, hits = [], []
+    for b in range(B):
+        a = 0
+        while a < C - 1 and feed[b, a + 1] == samples[b, a]:
+            a += 1
+        m = min(a + 1, max(int(budget[b]), 1))
+        has, first = False, 0
+        if eos is not None and eos[b] >= 0:
+            occ = [c for c in range(C) if samples[b, c] == eos[b]]
+            if occ:
+                has, first = True, occ[0]
+                m = min(m, first + 1)
+        hit = has and first < m
+        if not live[b]:
+            m, hit = 0, False
+        ms.append(m)
+        hits.append(hit)
+    return np.asarray(ms, np.int32), np.asarray(hits, bool)
+
+
+@settings(**SET)
+@given(data=st.data(), b=st.integers(1, 4), c=st.integers(2, 6),
+       use_eos=st.booleans())
+def test_speculative_acceptance_matches_oracle(data, b, c, use_eos):
+    """The fused acceptance rule == the obvious sequential oracle, and
+    its safety invariants hold for ANY draft/sample/budget/eos draw:
+    live rows always commit >= 1 token (progress), never more than
+    ``max(budget, 1)`` (window safety), the committed prefix really is
+    verify-exact, and dead rows commit nothing."""
+    from repro.models.api import speculative_acceptance
+    tok = st.integers(0, 3)                      # tiny vocab: real matches
+    feed = np.asarray(data.draw(
+        st.lists(st.lists(tok, min_size=c, max_size=c),
+                 min_size=b, max_size=b)), np.int32)
+    samples = np.asarray(data.draw(
+        st.lists(st.lists(tok, min_size=c, max_size=c),
+                 min_size=b, max_size=b)), np.int32)
+    budget = np.asarray(data.draw(
+        st.lists(st.integers(-2, 8), min_size=b, max_size=b)), np.int32)
+    live = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=b, max_size=b)), bool)
+    eos = np.asarray(data.draw(
+        st.lists(st.integers(-1, 3), min_size=b, max_size=b)),
+        np.int32) if use_eos else None
+
+    m, hit = speculative_acceptance(
+        jnp.asarray(feed), jnp.asarray(samples), jnp.asarray(budget),
+        jnp.asarray(live),
+        None if eos is None else jnp.asarray(eos))
+    m, hit = np.asarray(m), np.asarray(hit)
+    m_ref, hit_ref = _acceptance_reference(feed, samples, budget, live,
+                                           eos)
+    np.testing.assert_array_equal(m, m_ref)
+    np.testing.assert_array_equal(hit, hit_ref)
+    for i in range(b):
+        if not live[i]:
+            assert m[i] == 0 and not hit[i]
+            continue
+        assert 1 <= m[i] <= max(budget[i], 1)    # progress, window-safe
+        # verify-exactness of the committed prefix: every accepted draft
+        # token equals the sample sequential decode would have emitted
+        for j in range(m[i] - 1):
+            assert feed[i, j + 1] == samples[i, j]
+        if hit[i]:
+            assert eos is not None and samples[i, m[i] - 1] == eos[i]
+
+
+# ---------------------------------------------------------------------------
+# TierStore: LRU / pin / demote safety under arbitrary op sequences
+# ---------------------------------------------------------------------------
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["put", "put_pin", "get", "pop", "pin",
+                               "unpin"]),
+              st.integers(0, 5)),                # key index
+    min_size=1, max_size=30)
+
+
+@settings(**SET)
+@given(ops=_OPS, capacity=st.integers(0, 120), disk=st.booleans())
+def test_tier_store_safety_under_arbitrary_ops(ops, capacity, disk,
+                                               tmp_path_factory):
+    """For ANY interleaving of put/get/pin/unpin/pop on a capacity-
+    bounded store: pinned content is never lost; with a disk tier no
+    un-popped content is EVER lost (eviction demotes, it does not
+    drop); RAM occupancy accounting stays exact and within capacity
+    unless a survivor has an excuse (pinned with nowhere to demote to,
+    or the reference a get() just promoted); hits return the key's
+    content.  The store is content-addressed — a key DETERMINES its
+    bytes — so the model derives each blob from its key."""
+    from repro.serving.tier_store import Blob, TierStore
+
+    spill = str(tmp_path_factory.mktemp("spill")) if disk else None
+    store = TierStore(capacity_bytes=capacity, spill_dir=spill)
+    content = set()                              # keys put and not popped
+    pins = {}                                    # key -> pin count
+    keys = [bytes([i]) * 8 for i in range(6)]
+
+    def blob_for(ki):
+        return Blob({"x": np.full((10 * ki + 5,), ki + 1, np.uint8)})
+
+    # keys a get() promoted (or touched) since the last eviction pass:
+    # a promotion may leave its entry over capacity (the caller holds a
+    # live reference), and non-evicting ops (pop/pin) don't clear it
+    promoted = set()
+    for op, ki in ops:
+        key = keys[ki]
+        if op in ("put", "put_pin"):
+            store.put(key, blob_for(ki), pin=(op == "put_pin"))
+            content.add(key)
+            promoted.clear()                     # put ran an eviction pass
+            if op == "put_pin":
+                pins[key] = pins.get(key, 0) + 1
+        elif op == "get":
+            blob = store.get(key)
+            if blob is not None:
+                promoted.add(key)
+            if key not in content:
+                assert blob is None, "content fabricated from nowhere"
+            elif disk or key in pins:
+                # a disk tier never loses, a pin is never dropped; an
+                # UNPINNED ram-only entry may legitimately have been
+                # evicted, so only these two cases guarantee a hit
+                assert blob is not None, "resident content lost"
+            if blob is not None:
+                assert int(blob.arrays["x"][0]) == ki + 1, \
+                    "content does not match its key"
+        elif op == "pop":
+            store.pop(key)
+            content.discard(key)
+            pins.pop(key, None)
+        elif op == "pin":
+            if key in store:
+                store.pin(key)
+                pins[key] = pins.get(key, 0) + 1
+        elif op == "unpin":
+            if pins.get(key):
+                store.unpin(key)
+                pins[key] -= 1
+                if not pins[key]:
+                    del pins[key]
+                    promoted.clear()             # unpin ran an eviction pass
+        # -- invariants after EVERY op ----------------------------------
+        assert store.occupancy_bytes == sum(
+            b.nbytes for b in store._ram.values()), "byte accounting drifted"
+        if store.occupancy_bytes > capacity:
+            # eviction's post-condition: anything still resident over
+            # capacity is either pinned with no disk tier to demote to,
+            # or was promoted by a get() since the last eviction pass
+            # (the caller's reference is live)
+            for k in store._ram:
+                assert (k in store._pins and not disk) or k in promoted, \
+                    "over capacity without an excuse"
+        for k in pins:
+            assert k in store, "pinned content was dropped"
+        if disk:
+            for k in content:
+                assert k in store, "disk-tiered store lost un-popped content"
+    # drain: every key the model still holds is retrievable with its
+    # content (LRU evictions only ever dropped UNPINNED RAM-only
+    # entries, which the model tracked above)
+    for k in content:
+        if disk or k in pins:
+            blob = store.get(k)
+            assert blob is not None
+            assert int(blob.arrays["x"][0]) == k[0] + 1

@@ -21,7 +21,6 @@ real CPU device).
 * **serve --mesh validation** — bad geometries die in argparse, not in
   a shape crash.
 """
-import functools
 import re
 
 import jax
@@ -29,27 +28,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import get_config, reduced
 from repro.launch.mesh import make_decode_mesh
 from repro.models.api import build_decode
-from repro.models.layouts import LayoutSpec
 from repro.serving.engine import Engine
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
+
+import parity
 
 requires_mesh = pytest.mark.skipif(
     len(jax.devices()) < 8,
     reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
            "device_count=8)")
 
-B, L, GEN, MAX_LEN, PAGE = 2, 16, 6, 64, 16
-
-_CONFIGS = {
-    "tconst": ("tconst_41m", {}),
-    "tlin": ("tconst_41m", {"attention_mode": "tlin"}),
-    "lm": ("smollm_360m", {}),
-    "encdec": ("whisper_small", {}),
-}
+B, L, GEN, MAX_LEN, PAGE = 2, 16, 6, 64, parity.PAGE
 
 
 @pytest.fixture(scope="module")
@@ -61,18 +53,14 @@ def mesh():
 
 @pytest.fixture(scope="module")
 def setups():
-    from repro.models.api import build_model
-    out = {}
-    for fam, (name, kw) in _CONFIGS.items():
-        cfg = reduced(get_config(name), dtype="float32", **kw)
-        api = build_model(cfg)
-        out[fam] = (cfg, api, api.init(jax.random.PRNGKey(0)))
-    return out
+    return {fam: parity.family(fam)
+            for fam in ("tconst", "tlin", "lm", "encdec")}
 
 
 def _spec(kind):
-    return None if kind == "dense" else LayoutSpec(kind=kind,
-                                                   page_size=PAGE)
+    # pool_pages=None: this suite sizes the pool from slots (the mesh
+    # split is what's under test, not pool pressure).
+    return parity.layout_spec(kind, pool_pages=None)
 
 
 def _batch(cfg):

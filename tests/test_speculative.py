@@ -1,0 +1,456 @@
+"""Speculative decoding (PR 10): verify-exact acceptance as a fixed-
+shape batch op.
+
+The contract under test, at every layer:
+
+* **spec_chunk == decode_chunk** — one speculative round's emitted
+  tokens, per-slot key-chain positions, ``done`` flags and counters all
+  match what ``n_steps=m`` sequential steps would have produced.
+  Acceptance is a counter advance; rollback is NOT advancing — there is
+  no KV rewrite, so the resident state after a round with ``m`` accepted
+  tokens must be step-for-step indistinguishable from the sequential
+  state.
+* **verify_chunk == stepping** — the verify logits at position ``c``
+  equal the logits sequential decode produces after feeding
+  ``feed[:, :c+1]`` (the dense oracle; the CI pallas-interpret lane
+  re-runs this suite with the kernels swapped in).
+* **drafts are throughput, never correctness** — an adversarial drafter
+  (or any drafter) cannot change a stream, only its wall-clock; the
+  scheduler matrix asserts token-identity against the non-speculative
+  run across families x layouts, greedy and sampled.
+* **paged invariants survive speculation** — rejected draft positions
+  never leak into shared pages: CoW/refcount accounting closes out
+  exactly as without speculation.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.models.api import (build_decode, decode_chunk, spec_chunk,
+                              speculative_acceptance)
+from repro.serving.engine import Engine
+from repro.serving.metrics import ServingTelemetry
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.session import Session
+from repro.serving.speculative import (Drafter, NGramDrafter,
+                                       TConstModelDrafter, get_drafter)
+
+import parity
+
+K = 4
+
+
+class AdversarialDrafter(Drafter):
+    """Worst-case drafter: proposes a constant stream of the same token,
+    maximally wrong on purpose — verify-exactness must reduce it to a
+    slower sequential decode, never a different one."""
+
+    name = "adversarial"
+
+    def __init__(self, slots: int, token: int):
+        self.slots = slots
+        self.token = int(token)
+
+    def admit(self, slot: int, tokens) -> None:
+        pass                                     # stateless on purpose
+
+    def observe(self, slot: int, tokens) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass
+
+    def propose_batch(self, k: int) -> np.ndarray:
+        return np.full((self.slots, k), self.token, np.int32)
+
+
+def _per_slot_keys(b, seed=0):
+    return jnp.stack([jax.random.PRNGKey(seed + i) for i in range(b)])
+
+
+def _prefilled(family_name, kind=None, b=2, max_len=96, prompt_len=13):
+    """(decode, params, state, token, cfg): a prefiled B-slot decode
+    ready for chunk-level comparisons."""
+    cfg, api, params = parity.family(family_name)
+    decode = build_decode(cfg, parity.layout_spec(kind) if kind else None)
+    rng = np.random.RandomState(7)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(1, cfg.vocab_size, size=(b, prompt_len)), jnp.int32)}
+    extras = parity.extras_for(cfg)
+    if extras is not None:
+        batch["audio_feats"] = jnp.broadcast_to(
+            jnp.asarray(extras["audio_feats"])[None],
+            (b,) + extras["audio_feats"].shape)
+    logits, state = jax.jit(
+        lambda p, bt: decode.prefill(p, bt, max_len))(params, batch)
+    token = jnp.argmax(logits, -1).astype(jnp.int32)
+    return decode, params, state, token, cfg
+
+
+def _run_chunk(decode, params, state, token, key, n):
+    b = token.shape[0]
+    return decode_chunk(decode, params, state, token, key,
+                        jnp.zeros((b,)), jnp.ones((b,), bool), n)
+
+
+def _assert_same_continuation(decode, params, sa, ta, ka, sb, tb, kb,
+                              n=3, label=""):
+    """Two (state, token, key) triples must be observationally identical:
+    the next n sequential tokens and key chains agree bitwise."""
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb),
+                                  err_msg=f"{label}: last token differs")
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb),
+                                  err_msg=f"{label}: key chain diverged")
+    xa, _, _ = _run_chunk(decode, params, sa, ta, ka, n)
+    xb, _, _ = _run_chunk(decode, params, sb, tb, kb, n)
+    np.testing.assert_array_equal(
+        np.asarray(xa), np.asarray(xb),
+        err_msg=f"{label}: continuation diverged — the committed state "
+                f"is not the sequential state")
+
+
+# ---------------------------------------------------------------------------
+# spec_chunk == decode_chunk: the rollback-free state machine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "paged_int8"])
+def test_spec_chunk_full_accept_equals_k_plus_1_steps(kind):
+    """A perfect draft (the model's own continuation) commits k+1 tokens
+    in ONE dispatch, and the state is the k+1-step sequential state."""
+    decode, params, state, token, _ = _prefilled("lm", kind)
+    key = _per_slot_keys(token.shape[0])
+    b = token.shape[0]
+    draft, s_seq, k_seq = _run_chunk(decode, params, state, token, key, K)
+    seq_toks, s_seq1, k_seq1 = _run_chunk(decode, params, state, token,
+                                          key, K + 1)
+
+    toks, m, last, s_spec, k_spec = spec_chunk(
+        decode, params, state, token, draft, key,
+        jnp.zeros((b,)), jnp.ones((b,), bool))
+    assert (np.asarray(m) == K + 1).all(), \
+        f"perfect draft not fully accepted: m={np.asarray(m)}"
+    np.testing.assert_array_equal(np.asarray(toks)[:, :K + 1],
+                                  np.asarray(seq_toks))
+    _assert_same_continuation(decode, params, s_spec, last, k_spec,
+                              s_seq1, seq_toks[:, -1], k_seq1,
+                              label=f"full-accept/{kind}")
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged"])
+def test_spec_chunk_full_reject_equals_one_step(kind):
+    """An all-wrong draft still commits the bonus token (m=1) and the
+    state equals ONE sequential step — rejected positions were written
+    to the resident KV but the counters never advanced over them."""
+    decode, params, state, token, cfg = _prefilled("lm", kind)
+    key = _per_slot_keys(token.shape[0])
+    b = token.shape[0]
+    real, _, _ = _run_chunk(decode, params, state, token, key, K)
+    draft = (real + 1) % cfg.vocab_size          # != real everywhere
+    seq_toks, s_seq, k_seq = _run_chunk(decode, params, state, token,
+                                        key, 1)
+    toks, m, last, s_spec, k_spec = spec_chunk(
+        decode, params, state, token, draft, key,
+        jnp.zeros((b,)), jnp.ones((b,), bool))
+    assert (np.asarray(m) == 1).all()
+    np.testing.assert_array_equal(np.asarray(toks)[:, :1],
+                                  np.asarray(seq_toks))
+    _assert_same_continuation(decode, params, s_spec, last, k_spec,
+                              s_seq, seq_toks[:, -1], k_seq,
+                              label=f"full-reject/{kind}")
+
+
+def test_spec_chunk_respects_tconst_window_budget():
+    """tconst caps acceptance at the W_og boundary: samples past the
+    window resync are garbage, so m <= max(w_og - gen_len, 1) — even a
+    perfect draft cannot commit across the boundary, and the committed
+    prefix still equals the sequential stream."""
+    decode, params, state, token, _ = _prefilled("tconst", b=1)
+    key = _per_slot_keys(1)
+    draft, _, _ = _run_chunk(decode, params, state, token, key, K)
+    budget = int(np.asarray(
+        decode.verify_budget(decode.maybe_sync(params, state)))[0])
+    toks, m, last, s_spec, k_spec = spec_chunk(
+        decode, params, state, token, draft, key,
+        jnp.zeros((1,)), jnp.ones((1,), bool))
+    mm = int(np.asarray(m)[0])
+    assert 1 <= mm <= max(budget, 1), \
+        f"m={mm} escaped the window budget {budget}"
+    seq_toks, s_seq, k_seq = _run_chunk(decode, params, state, token,
+                                        key, mm)
+    np.testing.assert_array_equal(np.asarray(toks)[:, :mm],
+                                  np.asarray(seq_toks))
+    _assert_same_continuation(decode, params, s_spec, last, k_spec,
+                              s_seq, seq_toks[:, -1], k_seq,
+                              label="tconst-budget")
+
+
+def test_spec_chunk_eos_truncates_and_sets_done():
+    """An EOS sampled inside the accepted prefix truncates acceptance at
+    it (inclusive) and raises the on-device done flag, exactly like the
+    sequential path."""
+    decode, params, state, token, _ = _prefilled("lm", b=1)
+    key = _per_slot_keys(1)
+    seq, _, _ = _run_chunk(decode, params, state, token, key, K)
+    arr = np.asarray(seq)[0]
+    # pick an EOS id at the FIRST position where it occurs (a repeated
+    # greedy token would otherwise shift the truncation point earlier)
+    p = next(i for i in range(1, K) if arr[i] not in arr[:i])
+    eos = jnp.asarray([int(arr[p])], jnp.int32)
+    draft, _, _ = _run_chunk(decode, params, state, token, key, K)
+    toks, m, last, s_spec, _ = spec_chunk(
+        decode, params, state, token, draft, key,
+        jnp.zeros((1,)), jnp.ones((1,), bool), eos=eos)
+    assert int(np.asarray(m)[0]) == p + 1        # EOS position inclusive
+    assert bool(np.asarray(s_spec.bookkeeping["done"])[0])
+    np.testing.assert_array_equal(np.asarray(toks)[0, :p + 1], arr[:p + 1])
+
+
+def test_spec_chunk_inactive_rows_frozen():
+    """Inactive rows: m == 0, echoed token, key NOT advanced, and the
+    row's next-step logits bit-identical to the untouched state's."""
+    decode, params, state, token, _ = _prefilled("lm", b=2)
+    key = _per_slot_keys(2)
+    draft, _, _ = _run_chunk(decode, params, state, token, key, K)
+    active = jnp.asarray([True, False])
+    toks, m, last, s_spec, k_spec = spec_chunk(
+        decode, params, state, token, draft, key,
+        jnp.zeros((2,)), active)
+    assert int(np.asarray(m)[1]) == 0
+    assert (np.asarray(toks)[1] == int(np.asarray(token)[1])).all()
+    np.testing.assert_array_equal(np.asarray(k_spec)[1],
+                                  np.asarray(key)[1])
+    l_ref, _ = decode.step(params, state, token)
+    l_got, _ = decode.step(params, s_spec, token)
+    np.testing.assert_array_equal(np.asarray(l_ref)[1],
+                                  np.asarray(l_got)[1],
+                                  err_msg="frozen row's state changed")
+
+
+def test_verify_chunk_logits_match_stepping():
+    """The dense oracle: verify logits at position c == the logits
+    sequential decode emits after feeding feed[:, :c+1].  (The CI
+    pallas-interpret lane re-runs this with the kernel path active.)"""
+    decode, params, state, token, cfg = _prefilled("lm")
+    rng = np.random.RandomState(1)
+    feed = jnp.concatenate([
+        token[:, None],
+        jnp.asarray(rng.randint(1, cfg.vocab_size, size=(2, K)),
+                    jnp.int32)], axis=1)
+    v_logits, _ = jax.jit(decode.verify_chunk)(params, state, feed)
+    s = state
+    for c in range(K + 1):
+        step_logits, s = decode.step(params, s, feed[:, c])
+        np.testing.assert_allclose(
+            np.asarray(v_logits)[:, c], np.asarray(step_logits),
+            rtol=2e-5, atol=2e-5,
+            err_msg=f"verify position {c} disagrees with stepping")
+
+
+def test_speculative_acceptance_rule_basics():
+    """Spot checks of the pure acceptance rule (exhaustive properties
+    live in tests/test_property.py)."""
+    feed = jnp.asarray([[5, 7, 8, 9]])           # token + 3-draft
+    live = jnp.ones((1,), bool)
+    big = jnp.full((1,), 1 << 20, jnp.int32)
+    # samples agree with the first 2 draft tokens -> m = 3
+    m, hit = speculative_acceptance(
+        feed, jnp.asarray([[7, 8, 1, 2]]), big, live)
+    assert int(m[0]) == 3 and not bool(hit[0])
+    # budget caps acceptance
+    m, _ = speculative_acceptance(
+        feed, jnp.asarray([[7, 8, 9, 4]]), jnp.asarray([2]), live)
+    assert int(m[0]) == 2
+    # budget 0 still commits the bonus token
+    m, _ = speculative_acceptance(
+        feed, jnp.asarray([[7, 8, 9, 4]]), jnp.asarray([0]), live)
+    assert int(m[0]) == 1
+    # EOS inside the prefix truncates inclusively and reports the hit
+    m, hit = speculative_acceptance(
+        feed, jnp.asarray([[7, 8, 9, 4]]), big, live,
+        eos=jnp.asarray([8]))
+    assert int(m[0]) == 2 and bool(hit[0])
+
+
+# ---------------------------------------------------------------------------
+# scheduler matrix: speculative streams == plain streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "paged_int8"])
+@pytest.mark.parametrize("family", ["tconst", "lm"])
+def test_scheduler_spec_stream_identical(family, kind):
+    """The acceptance bar: --speculate k changes wall-clock only.  Every
+    session's stream under speculation is token-identical to the plain
+    scheduler's, across families x layouts, and the rounds really were
+    speculative (spec_chunk stats, k+1 forwarded positions each)."""
+    _, sched = parity.stream_parity_case(
+        family, kind, variant_kw={"speculate": K}, gen=8,
+        label=f"spec {family}/{kind}")
+    rounds = [s for s in sched.stats if s.kind == "spec_chunk"]
+    assert rounds, "speculate=k never dispatched a verify round"
+    assert all(s.forward_tokens == K + 1 for s in rounds)
+    assert not any(s.kind == "chunk" for s in sched.stats), \
+        "speculative scheduler fell back to plain chunks"
+
+
+@pytest.mark.parametrize("family,kind", [("tlin", "paged"),
+                                         ("encdec", "dense")])
+def test_scheduler_spec_stream_identical_other_families(family, kind):
+    parity.stream_parity_case(family, kind, variant_kw={"speculate": K},
+                              gen=8, label=f"spec {family}/{kind}")
+
+
+def test_scheduler_spec_sampled_temperature_identical():
+    """Per-slot key chains make verify-exactness hold at temperature > 0
+    too: each slot's chain advances by exactly its accepted count.
+    Explicit per-session seeds pin the chains across runs (unseeded
+    sessions derive keys from the global session id)."""
+    parity.stream_parity_case(
+        "tconst", "paged", variant_kw={"speculate": K}, gen=8,
+        session_kw={"temperature": 0.8, "seed": 11},
+        label="spec sampled")
+
+
+def test_scheduler_spec_adversarial_drafter_exact():
+    """A maximally wrong drafter degrades throughput to sequential,
+    never the stream."""
+    cfg, _, _ = parity.family("lm")
+    _, sched = parity.stream_parity_case(
+        "lm", "paged",
+        variant_kw={"speculate": K,
+                    "drafter": AdversarialDrafter(2, cfg.vocab_size - 1)},
+        gen=8, label="adversarial drafter")
+    rounds = [s for s in sched.stats if s.kind == "spec_chunk"]
+    # every round commits exactly the bonus token per live slot
+    assert all(s.tokens <= 2 for s in rounds)
+
+
+def test_scheduler_spec_cow_refcounts_close_out():
+    """Prefix sharing under speculation: rejected draft positions are
+    written through the slot's OWN pages (the CoW fork happened at
+    admission/resync as usual), so shared-page refcounts and the free
+    pool close out exactly as without speculation — and the streams
+    match the non-speculative sharing run."""
+    cfg, _, params = parity.family("tlin")
+    prompts = parity.shared_prompts(cfg, 3)
+    spec = parity.layout_spec("paged", pool_pages=20)
+    common = dict(gen=8, stagger=False, slots=3, prefix_sharing=True)
+    ref, _ = parity.serve_streams(cfg, params, prompts, spec, **common)
+    out, sched = parity.serve_streams(cfg, params, prompts, spec,
+                                      speculate=K, **common)
+    parity.assert_streams_equal(ref, out, "spec + prefix sharing")
+    assert (sched.page_refcounts() == 0).all(), \
+        "speculation leaked page references"
+    assert len(sched.free_pages) == 20
+    assert not sched._prefix_map and not sched._page_key
+
+
+def test_scheduler_spec_telemetry_reports_acceptance():
+    cfg, _, params = parity.family("lm")
+    prompts = parity.make_prompts(cfg, (21, 34, 17))
+    tel = ServingTelemetry()
+    parity.serve_streams(cfg, params, prompts, None, gen=8,
+                         speculate=K, telemetry=tel)
+    spec = tel.summary()["spec_decode"]
+    assert spec is not None and spec["sessions"] == 3
+    assert spec["rounds"] > 0
+    assert spec["drafted"] == spec["rounds"] * K
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+    assert spec["tokens_per_round"] >= 1.0
+
+
+def test_scheduler_rejects_speculation_where_unsupported():
+    cfg = reduced(get_config("mamba2_130m"), dtype="float32")
+    decode = build_decode(cfg)
+    assert not decode.supports_speculative()
+    with pytest.raises(ValueError, match="speculat"):
+        SlotScheduler(decode, None, slots=2, max_len=64, chunk_size=4,
+                      speculate=K)
+
+
+# ---------------------------------------------------------------------------
+# Engine path (shared batch key -> greedy only)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family,kind", [("tconst", "dense"),
+                                         ("lm", "paged")])
+def test_engine_speculative_greedy_identical(family, kind):
+    cfg, api, params = parity.family(family)
+    rng = np.random.RandomState(5)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(1, cfg.vocab_size, size=(2, 12)), jnp.int32)}
+    spec = parity.layout_spec(kind) if kind != "dense" else None
+    ref = Engine(api, params, max_len=64,
+                 layout=spec).generate(dict(batch), 10)
+    eng = Engine(api, params, max_len=64, layout=spec)
+    out = eng.generate_speculative(dict(batch), 10, k=K)
+    np.testing.assert_array_equal(ref, out)
+    assert eng.spec_rounds <= 10
+
+
+def test_engine_speculative_model_drafter_identical():
+    cfg, api, params = parity.family("tconst")
+    batch = {"tokens": jnp.arange(1, 13, dtype=jnp.int32)[None] + 3}
+    ref = Engine(api, params, max_len=64).generate(dict(batch), 8)
+    eng = Engine(api, params, max_len=64)
+    drafter = get_drafter("tconst", slots=1, vocab=cfg.vocab_size,
+                          max_len=64)
+    out = eng.generate_speculative(dict(batch), 8, k=3, drafter=drafter)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_engine_speculative_rejects_sampling():
+    """One shared batch key cannot reproduce per-position sampled draws
+    — the Engine refuses instead of silently changing streams."""
+    cfg, api, params = parity.family("lm")
+    eng = Engine(api, params, max_len=64, sample_temperature=0.8)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.generate_speculative(
+            {"tokens": jnp.ones((1, 8), jnp.int32)}, 4)
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_continues_repeated_motif():
+    d = NGramDrafter(2)
+    d.admit(0, [5, 6, 7, 5, 6])
+    d.admit(1, [9])
+    prop = d.propose_batch(3)
+    assert prop.shape == (2, 3) and prop.dtype == np.int32
+    # trailing (5, 6) last occurred at the start, followed by 7
+    assert prop[0, 0] == 7
+    assert (prop[1] == 9).all()                  # repeat-last fallback
+
+    d.release(0)
+    assert (d.propose_batch(3)[0] == 0).all()    # released slot: zeros
+
+
+def test_ngram_drafter_window_bounded():
+    d = NGramDrafter(1, window=16)
+    d.admit(0, list(range(100)))
+    assert len(d._hist[0]) == 16
+    d.observe(0, list(range(40)))
+    assert len(d._hist[0]) == 16
+
+
+def test_tconst_model_drafter_shapes_and_overflow():
+    d = TConstModelDrafter(2, vocab=512, max_len=32)
+    d.admit(0, [1, 2, 3, 4])
+    prop = d.propose_batch(3)
+    assert prop.shape == (2, 3) and prop.dtype == np.int32
+    assert (prop[1] == 0).all()                  # empty slot proposes 0
+    assert (0 <= prop).all() and (prop < 512).all()
+    # overflowing the drafter's own max_len must disable the slot, not
+    # crash the serving loop
+    d.observe(0, list(range(1, 40)))
+    prop = d.propose_batch(3)
+    assert prop.shape == (2, 3)

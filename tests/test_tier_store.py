@@ -25,70 +25,53 @@ Four concerns:
    in the restore program (the O(1) re-admission acceptance bar).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import get_config, reduced
-from repro.models import layouts as LT
-from repro.models.api import build_decode, build_model
+from repro.models.api import build_decode
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.session import Session
 from repro.serving.tier_store import (Blob, TierStore,
                                       flatten_slot_snapshot,
                                       unflatten_slot_snapshot)
 
+import parity
+
 PAGE = 8
+
+# family fixtures / extras come from tests/parity.py (this suite's "lm"
+# is the MQA reduction); the 8-token pages make spill points land
+# mid-page, so the layout spec stays local
+_extras = parity.extras_for
 
 
 @pytest.fixture(scope="module")
 def tconst_setup():
-    cfg = reduced(get_config("tconst_41m"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("tconst")
 
 
 @pytest.fixture(scope="module")
 def tlin_setup():
-    cfg = reduced(get_config("tconst_41m"), dtype="float32",
-                  attention_mode="tlin")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("tlin")
 
 
 @pytest.fixture(scope="module")
 def lm_setup():
-    cfg = reduced(get_config("llama3_405b"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("lm_mqa")
 
 
 @pytest.fixture(scope="module")
 def encdec_setup():
-    cfg = reduced(get_config("whisper_small"), dtype="float32")
-    api = build_model(cfg)
-    return cfg, api, api.init(jax.random.PRNGKey(0))
+    return parity.family("encdec")
 
 
 def _spec(kind):
-    if kind == "dense":
-        return None
-    return LT.LayoutSpec(kind=kind, page_size=PAGE, pool_pages=40)
-
-
-def _extras(cfg):
-    if not cfg.is_encdec:
-        return None
-    rng = np.random.RandomState(9)
-    return {"audio_feats": rng.randn(
-        cfg.encoder_seq, cfg.frontend_dim).astype(np.float32)}
+    return parity.layout_spec(kind, page_size=PAGE, pool_pages=40)
 
 
 def _prompts(cfg, n, seed=3):
-    rng = np.random.RandomState(seed)
     # lengths straddle page boundaries so spill points land mid-page
-    return [rng.randint(1, cfg.vocab_size,
-                        size=9 + 4 * i).astype(np.int32) for i in range(n)]
+    return parity.make_prompts(cfg, [9 + 4 * i for i in range(n)], seed)
 
 
 def _blob(nbytes, fill=0):
@@ -167,7 +150,8 @@ def test_put_under_all_pinned_over_capacity_pressure():
     assert st.stats["evictions"] == 1
     assert all(k in st for k in keys) and st.occupancy_bytes == 300
     assert st.get(keys[1]).meta["fill"] == 1     # content intact
-    # unpinning opens exactly the unpinned entries to the next pass
+    # dropping the last pin evicts the former pin-squatter eagerly; the
+    # next put then has no excuse to keep the unpinned newcomer either
     st.unpin(keys[0])
     st.put(ku, _blob(50, 9))
     assert keys[0] not in st and ku not in st    # both unpinned: evicted
@@ -269,8 +253,9 @@ def test_spill_resume_token_identical(family, kind, request):
     _, ref = run(slots=4)
     store = TierStore(capacity_bytes=1 << 30)
     sched, spl = run(slots=2, store=store, preempt=1)
-    for r, s in zip(ref, spl):
-        assert r.tokens == s.tokens, "spilling changed the stream"
+    parity.assert_streams_equal([r.tokens for r in ref],
+                                [s.tokens for s in spl],
+                                f"spill/resume {family}/{kind}")
     # >= 1 full cycle per excess session (4 sessions - 2 slots = 2)
     assert sum(1 for s in spl if s.resumes >= 1) >= 2
     assert sched.spill_stats["spills"] == sched.spill_stats["resumes"] > 0
@@ -314,9 +299,9 @@ def test_spill_resume_meshed_bit_identical(kind, tlin_setup):
     ref_sched, ref = run(None, params)
     sched, out = run(mesh, meshed_params)
     assert sched.spill_stats["spills"] == sched.spill_stats["resumes"] > 0
-    for r, s in zip(ref, out):
-        assert r.tokens == s.tokens, \
-            "meshed spill/resume changed the stream"
+    parity.assert_streams_equal([r.tokens for r in ref],
+                                [s.tokens for s in out],
+                                f"meshed spill/resume {kind}")
     # the byte accounting stays GLOBAL under the sharded pool
     assert sched.kv_bytes() == ref_sched.kv_bytes()
     assert sched.spill_stats["spilled_bytes"] == \
